@@ -1,0 +1,27 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows; ``derived``
+carries the figure-of-merit for that experiment (efficiency, ratio, ...).
+Set REPRO_FULL=1 for paper-size problems (1M particles / 2048² matrices).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+FULL = os.environ.get("REPRO_FULL", "0") == "1"
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_us(fn: Callable, repeat: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6

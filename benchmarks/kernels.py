@@ -1,0 +1,38 @@
+"""Per-kernel micro-benchmarks (CPU interpret mode: numbers are structural
+sanity / regression tracking, NOT TPU performance — the TPU roofline lives
+in benchmarks/roofline.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.nbody import ops as nbody_ops
+from repro.kernels.qr_tile import ops as qr_ops
+
+from .common import emit, time_us
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for b in (32, 64):
+        a = jnp.asarray(rng.standard_normal((b, b)), jnp.float32)
+        rv, tau, t = qr_ops.geqrf(a)
+        jax.block_until_ready(rv)
+        us = time_us(lambda: jax.block_until_ready(qr_ops.geqrf(a)))
+        emit(f"kernel_geqrf_{b}", us, f"flops~{4 / 3 * b**3:.0f}")
+        c = jnp.asarray(rng.standard_normal((b, b)), jnp.float32)
+        us = time_us(
+            lambda: jax.block_until_ready(qr_ops.apply_qt(rv, t, c)))
+        emit(f"kernel_apply_qt_{b}", us, f"flops~{3 * b**3:.0f}")
+    for n in (512, 2048):
+        x = jnp.asarray(rng.standard_normal((3, n)), jnp.float32)
+        m = jnp.asarray(rng.random(n), jnp.float32)
+        jax.block_until_ready(nbody_ops.acc_self(x, m))
+        us = time_us(lambda: jax.block_until_ready(nbody_ops.acc_self(x, m)))
+        emit(f"kernel_nbody_self_{n}", us, f"interactions={n * (n - 1)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Fig 9 claim: critical-path weights schedule DGEQRF tasks as soon
+as available, preventing end-of-computation bottlenecks (vs OmpSs).
+
+Ablation on the QR graph: (a) critical-path weights (the paper),
+(b) flat weights (FIFO-ish greedy), (c) cost-only weights (no lookahead).
+Plus DGEQRF start-time statistics (the Fig 9 visual, quantified)."""
+
+from __future__ import annotations
+
+from repro.apps import qr
+from repro.core import simulate
+
+from .common import emit
+
+
+def run(mt: int, n: int, mode: str):
+    s, _ = qr.make_qr_graph(mt, mt, nr_queues=n)
+    s.prepare()
+    if mode == "flat":
+        for t in s.tasks:
+            t.weight = 1.0
+    elif mode == "cost":
+        for t in s.tasks:
+            t.weight = t.cost
+    s._prepared = True
+    return s, simulate(s, n)
+
+
+def main() -> None:
+    mt, n = 32, 64
+    base = None
+    for mode in ("critical_path", "flat", "cost"):
+        s, r = run(mt, n, mode)
+        if base is None:
+            base = r.makespan
+        # mean normalized start time of DGEQRF(k) relative to level k
+        geqrf = [(s.tasks[e.tid].data[2], e.t0) for e in r.timeline
+                 if s.tasks[e.tid].type == qr.T_GEQRF]
+        lateness = sum(t0 for _, t0 in geqrf) / len(geqrf) / r.makespan
+        emit(f"qr_priority_{mode}", 0,
+             f"makespan={r.makespan:.0f} vs_cp={r.makespan / base:.3f}x "
+             f"geqrf_mean_start_frac={lateness:.3f}")
+
+
+if __name__ == "__main__":
+    main()

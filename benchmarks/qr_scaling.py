@@ -1,0 +1,51 @@
+"""Paper Fig 8 + §4.1 table: tiled-QR strong scaling and structural counts.
+
+Scheduler-limited scaling from the discrete-event engine driving the real
+scheduler code path (DESIGN.md §2: wall-clock 64-core scaling is not
+measurable on this 1-core container; the simulator uses the paper's own
+asymptotic task costs).  Paper: 73% parallel efficiency at 64 cores
+(including hardware effects)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.apps import qr
+from repro.core import simulate
+
+from .common import FULL, emit, time_us
+
+
+def main() -> None:
+    mt = 32 if FULL else 32          # the paper's grid is 32×32 tiles
+    counts = qr.paper_counts(mt, mt)
+    emit("qr_tasks", 0, f"count={counts['tasks']} (paper 11440)")
+    emit("qr_resources", 0, f"count={counts['resources']} (paper 1024)")
+    emit("qr_locks", 0, f"count={counts['locks']} (paper 21856)")
+    emit("qr_uses", 0, f"count={counts['uses']} (paper 11408)")
+    emit("qr_deps", 0,
+         f"count={counts['deps']} (paper 21824; see EXPERIMENTS.md)")
+
+    t0 = time.perf_counter()
+    s, _ = qr.make_qr_graph(mt, mt)
+    build_us = (time.perf_counter() - t0) * 1e6
+    emit("qr_graph_build", build_us, f"tasks={s.nr_tasks}")
+
+    r1 = simulate(make(1, mt), 1)
+    t1 = r1.makespan
+    for n in (1, 2, 4, 8, 16, 32, 64):
+        t0 = time.perf_counter()
+        r = simulate(make(n, mt), n)
+        sim_us = (time.perf_counter() - t0) * 1e6
+        eff = t1 / (n * r.makespan)
+        emit(f"qr_scaling_{n:02d}", sim_us,
+             f"speedup={t1 / r.makespan:.2f} efficiency={eff:.3f}")
+
+
+def make(n: int, mt: int):
+    s, _ = qr.make_qr_graph(mt, mt, nr_queues=n)
+    return s
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh)
+cell from the dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips × 197 TF/s bf16)     [per-chip form]
+  memory term     = HLO_bytes / (chips × 819 GB/s HBM)
+  collective term = collective_operand_bytes / (chips × 50 GB/s link)
+
+The dry-run records PER-CHIP HLO numbers (the compiled module is the
+post-SPMD per-device program), so each term is per-chip value / per-chip
+rate.  FLOP/collective numbers use the depth-extrapolated values (scan
+bodies are counted once by HloCostAnalysis; launch/dryrun.py probes two
+unrolled depths and extrapolates — verified in tests/test_dryrun_small.py).
+
+MODEL_FLOPS = 6·N_active·D (training) or 2·N_active·D (inference); the
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat/replication waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip (v5e)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    ex = rec.get("extrapolated") or {}
+    full = rec["full"]
+    flops = ex.get("flops_per_device", full["flops_per_device"])
+    bytes_acc = ex.get("bytes_accessed_per_device",
+                       full["bytes_accessed_per_device"])
+    coll = ex.get("collective_operand_bytes_per_device",
+                  full["collective_operand_bytes_per_device"])
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_acc / HBM_BW
+    t_x = coll / LINK_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    n_tokens = (rec["global_batch"] * rec["seq_len"]
+                if rec["kind"] in ("train", "prefill")
+                else rec["global_batch"])
+    model_flops = (6.0 if rec["kind"] == "train" else 2.0) \
+        * rec["active_params"] * n_tokens
+    mf_per_chip = model_flops / rec["chips"]
+    t_total = max(t_c, t_m, t_x)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": rec["chips"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": mf_per_chip / max(flops, 1.0),
+        "roofline_frac": (mf_per_chip / PEAK_FLOPS) / max(t_total, 1e-30),
+        "peak_gib": full["memory"]["peak_bytes"] / 2**30,
+        "arg_gib": full["memory"]["argument_bytes"] / 2**30,
+    }
+
+
+MOVE_HINTS = {
+    "compute": ("cut replicated per-chip compute (activation sharding "
+                "constraints / drop remat on cheap layers)"),
+    "memory": ("larger fused blocks or bf16 intermediates to cut HBM "
+               "traffic; kernel fusion of the dominant elementwise chains"),
+    "collective": ("reshard to cut all-gather volume (FSDP prefetch, "
+                   "overlap collectives with compute, int8 DP traffic)"),
+}
+
+
+def table(cells: List[Dict], mesh: str = "single") -> str:
+    rows = []
+    head = ("| arch | shape | compute s | memory s | collective s | "
+            "dominant | useful/HLO | roofline frac | state GiB/chip |")
+    sep = "|" + "---|" * 9
+    rows.append(head)
+    rows.append(sep)
+    for rec in cells:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skipped | — | — | — |")
+            continue
+        t = roofline_terms(rec)
+        if t is None:
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"ERROR | — | — | — |")
+            continue
+        rows.append(
+            f"| {t['arch']} | {t['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant']} | {t['useful_ratio']:.2f} | "
+            f"{t['roofline_frac']:.3f} | {t['arg_gib']:.1f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    from .common import emit
+    cells = load_cells()
+    if not cells:
+        emit("roofline", 0, "no dryrun artifacts yet (run launch/dryrun.py)")
+        return
+    n_ok = sum(1 for c in cells if c.get("status") == "ok")
+    n_skip = sum(1 for c in cells if c.get("status") == "skipped")
+    emit("roofline_cells", 0, f"ok={n_ok} skipped={n_skip} "
+                              f"total={len(cells)}")
+    worst = None
+    for rec in cells:
+        t = roofline_terms(rec)
+        if t is None:
+            continue
+        emit(f"roofline_{rec['mesh']}_{rec['arch']}_{rec['shape']}", 0,
+             f"compute={t['compute_s']:.3e}s memory={t['memory_s']:.3e}s "
+             f"collective={t['collective_s']:.3e}s dom={t['dominant']} "
+             f"useful={t['useful_ratio']:.2f} frac={t['roofline_frac']:.3f}")
+        if rec["mesh"] == "single" and (worst is None
+                                        or t["roofline_frac"] < worst[0]):
+            worst = (t["roofline_frac"], rec["arch"], rec["shape"])
+    if worst:
+        emit("roofline_worst_cell", 0,
+             f"{worst[1]}/{worst[2]} frac={worst[0]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

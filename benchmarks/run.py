@@ -1,0 +1,32 @@
+"""Benchmark harness — one module per paper table/figure + the roofline.
+Prints ``name,us_per_call,derived`` CSV.  REPRO_FULL=1 for paper-size runs.
+
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+SECTIONS = ("qr_scaling", "bh_scaling", "priority_ablation",
+            "conflict_ablation", "pipeline_bubble", "kernels", "roofline")
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(SECTIONS)
+    failed = []
+    for name in want:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        raise SystemExit(f"benchmark sections failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""The paper's two validation applications (§4): tiled QR and Barnes-Hut."""

@@ -1,0 +1,457 @@
+"""Task-based Barnes-Hut tree-code (paper §4.2).
+
+Particles are sorted hierarchically so every cell owns a *contiguous* slice
+of the global particle array (paper Fig 10) — cells at every level can hand
+their particle block straight to a vectorised kernel.  Cells are
+*hierarchical resources* (cell.res.parent = parent cell's res), so a task
+locking a cell conflicts with tasks locking any ancestor or descendant —
+exactly the write-set semantics of force accumulation.
+
+Task types (paper Fig 16 + §4.2):
+  * ``T_SELF``  — all pairwise interactions inside one task-stop cell
+                  (single-cell recursion stops when not split or
+                  count ≤ n_task);  locks the cell.
+  * ``T_PAIR``  — interactions spanning two neighbouring cells (pair
+                  recursion stops when not both split or
+                  count_i·count_j ≤ n_task²);  locks both cells.
+  * ``T_PC``    — particle-cell (centre-of-mass) interactions for one
+                  *leaf* cell (the leaf "does its own tree walk");  locks
+                  the leaf.
+  * ``T_COM``   — centre-of-mass of one cell; children's COM tasks unlock
+                  the parent's (bottom-up); every T_PC depends on the root
+                  COM.
+
+The interaction partition is built by the standard dual tree walk with
+neighbour pruning (comp_self/comp_pair of paper Fig 15, executed at graph
+build time):  a non-neighbour pair (a,b) met during the walk contributes
+COM interactions (leaves(a) ← com(b), leaves(b) ← com(a)); a pair with at
+least one unsplit side contributes a direct block.  This is exact: every
+directed particle pair is covered exactly once (tested).
+"""
+
+from __future__ import annotations
+
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QSched, SequentialExecutor, conflict_rounds
+from repro.kernels.nbody import ops
+from repro.kernels.nbody.ref import DEFAULT_EPS
+
+T_SELF, T_PAIR, T_PC, T_COM = range(4)
+TASK_NAMES = {T_SELF: "self", T_PAIR: "pair_pp", T_PC: "pair_pc",
+              T_COM: "com"}
+
+
+@dataclass
+class Cell:
+    cid: int
+    loc: np.ndarray          # lower corner (3,)
+    h: float                 # edge length (cubic cells)
+    start: int               # first particle index (contiguous block)
+    count: int
+    depth: int
+    parent: int = -1
+    split: bool = False
+    children: List[int] = field(default_factory=list)
+    res: int = -1
+    task_com: int = -1
+
+
+class Octree:
+    """Recursive octree with hierarchical particle sort (paper Fig 10)."""
+
+    def __init__(self, x: np.ndarray, m: np.ndarray, n_max: int = 100):
+        assert x.shape[1] == 3
+        self.n = x.shape[0]
+        self.n_max = n_max
+        self.x = np.array(x, dtype=np.float64)
+        self.m = np.array(m, dtype=np.float64)
+        self.cells: List[Cell] = []
+        lo = self.x.min(axis=0)
+        width = float((self.x.max(axis=0) - lo).max()) * (1 + 1e-9) + 1e-30
+        sys.setrecursionlimit(max(sys.getrecursionlimit(), 100000))
+        self._build(lo, width, 0, self.n, 0, -1)
+        self.x = self.x.T.copy()  # → (3, N) kernel layout after sorting
+
+    def _build(self, loc, h, start, count, depth, parent) -> int:
+        cid = len(self.cells)
+        cell = Cell(cid, np.array(loc), h, start, count, depth, parent)
+        self.cells.append(cell)
+        if count > self.n_max:
+            cell.split = True
+            seg = slice(start, start + count)
+            xs = self.x[seg]
+            mid = loc + h / 2
+            octant = ((xs[:, 0] >= mid[0]).astype(np.int8) * 4
+                      + (xs[:, 1] >= mid[1]).astype(np.int8) * 2
+                      + (xs[:, 2] >= mid[2]).astype(np.int8))
+            order = np.argsort(octant, kind="stable")
+            self.x[seg] = xs[order]
+            self.m[seg] = self.m[seg][order]
+            counts = np.bincount(octant, minlength=8)
+            off = start
+            for o in range(8):
+                c = int(counts[o])
+                if c == 0:
+                    continue
+                cloc = loc + np.array([h / 2 * ((o >> 2) & 1),
+                                       h / 2 * ((o >> 1) & 1),
+                                       h / 2 * (o & 1)])
+                child = self._build(cloc, h / 2, off, c, depth + 1, cid)
+                cell.children.append(child)
+                off += c
+        return cid
+
+    def neighbours(self, a: int, b: int) -> bool:
+        ca, cb = self.cells[a], self.cells[b]
+        tol = 1e-9 * (ca.h + cb.h)
+        for d in range(3):
+            if (ca.loc[d] > cb.loc[d] + cb.h + tol
+                    or cb.loc[d] > ca.loc[d] + ca.h + tol):
+                return False
+        return True
+
+    def leaves_of(self, c: int) -> List[int]:
+        cell = self.cells[c]
+        if not cell.split:
+            return [c]
+        out: List[int] = []
+        stack = [c]
+        while stack:
+            k = stack.pop()
+            ck = self.cells[k]
+            if ck.split:
+                stack.extend(ck.children)
+            else:
+                out.append(k)
+        return out
+
+
+@dataclass
+class BHGraph:
+    sched: QSched
+    tree: Octree
+    # per-task work lists (indices into tree.cells)
+    self_blocks: Dict[int, List[int]]                  # tid -> cells (direct self)
+    self_pairs: Dict[int, List[Tuple[int, int]]]       # tid -> (a,b) direct pairs
+    pair_pairs: Dict[int, List[Tuple[int, int]]]       # tid -> (a,b) direct pairs
+    pc_lists: Dict[int, List[int]]                     # tid -> com source cells
+    task_cell: Dict[int, Tuple]                        # tid -> cell payload
+    counts: Dict[str, int]
+
+
+def build_graph(tree: Octree, n_task: int = 5000, nr_queues: int = 1,
+                reown: bool = False) -> BHGraph:
+    assert n_task >= tree.n_max, "n_task must be >= n_max for stop-cell containment"
+    s = QSched(nr_queues=nr_queues, reown=reown)
+    # resources: one per cell, hierarchical; ownership by parts-array slice
+    for c in tree.cells:
+        owner = c.start * nr_queues // max(tree.n, 1)
+        parent_res = tree.cells[c.parent].res if c.parent != -1 else -1
+        c.res = s.addres(owner=owner, parent=parent_res)
+
+    # --- COM tasks (bottom-up dependencies) -------------------------------
+    for c in tree.cells:
+        # leaves reduce over their particles; inner cells combine 8 children
+        cost = float(c.count) if not c.split else float(len(c.children))
+        c.task_com = s.addtask(T_COM, data=("com", c.cid), cost=cost)
+        s.adduse(c.task_com, c.res)
+    for c in tree.cells:
+        if c.parent != -1:
+            s.addunlock(c.task_com, tree.cells[c.parent].task_com)
+    root_com = tree.cells[0].task_com
+
+    self_blocks: Dict[int, List[int]] = {}
+    self_pairs: Dict[int, List[Tuple[int, int]]] = {}
+    pair_pairs: Dict[int, List[Tuple[int, int]]] = {}
+    com_per_leaf: Dict[int, List[int]] = {}
+    task_cell: Dict[int, Tuple] = {}
+
+    def com_add(a: int, b: int) -> None:
+        for leaf in tree.leaves_of(a):
+            com_per_leaf.setdefault(leaf, []).append(b)
+
+    # --- inner dual walk: collect direct work for one task ----------------
+    def walk_self(c: int, tid: int) -> None:
+        cell = tree.cells[c]
+        if cell.split:
+            ch = cell.children
+            for a in ch:
+                walk_self(a, tid)
+            for i in range(len(ch)):
+                for j in range(i + 1, len(ch)):
+                    walk_pair(ch[i], ch[j], tid, self_pairs)
+        else:
+            self_blocks.setdefault(tid, []).append(c)
+
+    def walk_pair(a: int, b: int, tid: int, sink) -> None:
+        if not tree.neighbours(a, b):
+            com_add(a, b)
+            com_add(b, a)
+            return
+        ca, cb = tree.cells[a], tree.cells[b]
+        if ca.split and cb.split:
+            for i in ca.children:
+                for j in cb.children:
+                    walk_pair(i, j, tid, sink)
+        elif ca.split:
+            for i in ca.children:
+                walk_pair(i, b, tid, sink)
+        elif cb.split:
+            for j in cb.children:
+                walk_pair(a, j, tid, sink)
+        else:
+            sink.setdefault(tid, []).append((a, b))
+
+    # --- task creation (paper Fig 16 stop conditions) ---------------------
+    def make_tasks(ci: int, cj: Optional[int]) -> None:
+        if cj is None:
+            cell = tree.cells[ci]
+            if cell.split and cell.count > n_task:
+                ch = cell.children
+                for a in ch:
+                    make_tasks(a, None)
+                for i in range(len(ch)):
+                    for j in range(i + 1, len(ch)):
+                        make_tasks(ch[i], ch[j])
+            else:
+                tid = s.addtask(T_SELF, data=("self", ci),
+                                cost=float(cell.count) ** 2)
+                s.addlock(tid, cell.res)
+                task_cell[tid] = ("self", ci)
+                walk_self(ci, tid)
+        else:
+            if not tree.neighbours(ci, cj):
+                com_add(ci, cj)
+                com_add(cj, ci)
+                return
+            a, b = tree.cells[ci], tree.cells[cj]
+            if a.split and b.split and a.count * b.count > n_task * n_task:
+                for i in a.children:
+                    for j in b.children:
+                        make_tasks(i, j)
+            else:
+                tid = s.addtask(T_PAIR, data=("pair", ci, cj),
+                                cost=float(a.count) * float(b.count))
+                s.addlock(tid, a.res)
+                s.addlock(tid, b.res)
+                task_cell[tid] = ("pair", ci, cj)
+                walk_pair(ci, cj, tid, pair_pairs)
+
+    make_tasks(0, None)
+
+    # --- particle-cell tasks: one per *leaf* (paper: 32 768 for 1M) -------
+    pc_lists: Dict[int, List[int]] = {}
+    for c in tree.cells:
+        if c.split:
+            continue
+        srcs = com_per_leaf.get(c.cid, [])
+        tid = s.addtask(T_PC, data=("pc", c.cid), cost=float(c.count))
+        s.addlock(tid, c.res)
+        s.addunlock(root_com, tid)  # all COMs ready before any pc walk
+        task_cell[tid] = ("pc", c.cid)
+        pc_lists[tid] = srcs
+
+    by_type: Dict[int, int] = {}
+    for t in s.tasks:
+        by_type[t.type] = by_type.get(t.type, 0) + 1
+    counts = {
+        "tasks": s.nr_tasks,
+        "self": by_type.get(T_SELF, 0),
+        "pair_pp": by_type.get(T_PAIR, 0),
+        "pair_pc": by_type.get(T_PC, 0),
+        "com": by_type.get(T_COM, 0),
+        "resources": len(s.resources),
+        "locks": s.nr_locks,
+        "deps": s.nr_deps,
+    }
+    return BHGraph(s, tree, self_blocks, self_pairs, pair_pairs, pc_lists,
+                   task_cell, counts)
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+class BHState:
+    """Holds (3,N) positions, masses, accumulated accelerations and per-cell
+    COM values; executes tasks by id.
+
+    Two accumulation modes:
+      * ``jnp``   — functional ``.at[].add`` updates (traceable; used by the
+        sequential executor and jit round execution);
+      * ``numpy`` — in-place slice adds on a shared buffer (used by the
+        threaded executor: the resource locks are the ONLY thing preventing
+        concurrent read-modify-write races on overlapping cell ranges —
+        this is the paper's conflict-exclusion claim, tested for real).
+    """
+
+    def __init__(self, g: BHGraph, backend: str = "ref",
+                 eps: float = DEFAULT_EPS, accumulate: str = "jnp"):
+        self.g = g
+        self.backend = backend
+        self.eps = eps
+        self.accumulate = accumulate
+        self.x = jnp.asarray(g.tree.x, dtype=jnp.float32)       # (3, N)
+        self.m = jnp.asarray(g.tree.m, dtype=jnp.float32)       # (N,)
+        ncells = len(g.tree.cells)
+        if accumulate == "numpy":
+            self._acc_np = np.zeros((3, g.tree.n), np.float32)
+            self._com_np = np.zeros((3, ncells), np.float32)
+            self._cmass_np = np.zeros((ncells,), np.float32)
+        else:
+            self.acc = jnp.zeros_like(self.x)
+            self.com: Dict[int, jnp.ndarray] = {}
+            self.cmass: Dict[int, jnp.ndarray] = {}
+
+    def result(self) -> jnp.ndarray:
+        if self.accumulate == "numpy":
+            return jnp.asarray(self._acc_np)
+        return self.acc
+
+    def _rng(self, cid: int) -> slice:
+        c = self.g.tree.cells[cid]
+        return slice(c.start, c.start + c.count)
+
+    # -- accumulation primitives -------------------------------------------
+    def _add_acc(self, r: slice, val: jnp.ndarray) -> None:
+        if self.accumulate == "numpy":
+            self._acc_np[:, r] += np.asarray(val)
+        else:
+            self.acc = self.acc.at[:, r].add(val)
+
+    def _set_com(self, cid: int, com, mass) -> None:
+        if self.accumulate == "numpy":
+            self._com_np[:, cid] = np.asarray(com)
+            self._cmass_np[cid] = float(mass)
+        else:
+            self.com[cid] = com
+            self.cmass[cid] = mass
+
+    def _get_coms(self, cids: List[int]):
+        if self.accumulate == "numpy":
+            idx = np.asarray(cids)
+            return (jnp.asarray(self._com_np[:, idx]),
+                    jnp.asarray(self._cmass_np[idx]))
+        return (jnp.stack([self.com[k] for k in cids], axis=1),
+                jnp.stack([self.cmass[k] for k in cids]))
+
+    # -- task bodies ---------------------------------------------------------
+    def exec_task(self, ttype: int, data, tid: int = -1) -> None:
+        g, be, eps = self.g, self.backend, self.eps
+        if ttype == T_COM:
+            cid = data[1]
+            c = g.tree.cells[cid]
+            if c.split:
+                xs, ms = self._get_coms(c.children)
+                tot = jnp.sum(ms)
+                self._set_com(cid, (xs @ ms) / jnp.maximum(tot, 1e-30), tot)
+            else:
+                r = self._rng(cid)
+                tot = jnp.sum(self.m[r])
+                self._set_com(cid, (self.x[:, r] @ self.m[r])
+                              / jnp.maximum(tot, 1e-30), tot)
+            return
+        if ttype == T_SELF:
+            for c in g.self_blocks.get(tid, []):
+                r = self._rng(c)
+                self._add_acc(r, ops.acc_self(self.x[:, r], self.m[r], eps, be))
+            for a, b in g.self_pairs.get(tid, []):
+                self._direct_pair(a, b)
+        elif ttype == T_PAIR:
+            for a, b in g.pair_pairs.get(tid, []):
+                self._direct_pair(a, b)
+        elif ttype == T_PC:
+            srcs = g.pc_lists.get(tid, [])
+            if not srcs:
+                return
+            r = self._rng(data[1])
+            xj, mj = self._get_coms(srcs)
+            self._add_acc(r, ops.acc_pair(self.x[:, r], xj, mj, eps, be))
+        else:
+            raise ValueError(f"unknown task type {ttype}")
+
+    def _direct_pair(self, a: int, b: int) -> None:
+        ra, rb = self._rng(a), self._rng(b)
+        be, eps = self.backend, self.eps
+        self._add_acc(ra, ops.acc_pair(self.x[:, ra], self.x[:, rb],
+                                       self.m[rb], eps, be))
+        self._add_acc(rb, ops.acc_pair(self.x[:, rb], self.x[:, ra],
+                                       self.m[ra], eps, be))
+
+    # -- drivers ---------------------------------------------------------------
+    def run(self, mode: str = "sequential", nr_workers: int = 1) -> None:
+        if mode == "sequential":
+            self._run_sequential()
+        elif mode == "threaded":
+            assert self.accumulate == "numpy", (
+                "threaded mode requires accumulate='numpy'")
+            self._run_threaded(nr_workers)
+        else:
+            raise ValueError(mode)
+
+    def _run_sequential(self) -> None:
+        s = self.g.sched
+        s.start(threaded=False)
+        while True:
+            tid = s.gettask(0, block=False)
+            if tid is None:
+                if s.waiting <= 0:
+                    break
+                raise RuntimeError("deadlock in BH sequential run")
+            t = s.tasks[tid]
+            self.exec_task(t.type, t.data, tid)
+            s.done(tid)
+
+    def _run_threaded(self, nr_workers: int) -> None:
+        import threading
+        import time
+        s = self.g.sched
+        s.start(threaded=True)
+        errors: List[BaseException] = []
+
+        def worker(wid):
+            qid = wid % s.nr_queues
+            try:
+                while True:
+                    tid = s.gettask(qid, block=False)
+                    if tid is None:
+                        if s.waiting <= 0:
+                            return
+                        time.sleep(1e-5)
+                        continue
+                    t = s.tasks[tid]
+                    # NOTE: no global lock — the resource locks acquired by
+                    # gettask are what serialises overlapping writes.
+                    self.exec_task(t.type, t.data, tid)
+                    s.done(tid)
+            except BaseException as e:
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(w,))
+                   for w in range(nr_workers)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errors:
+            raise errors[0]
+
+
+
+def solve(x: np.ndarray, m: np.ndarray, n_max: int = 100,
+          n_task: int = 5000, backend: str = "ref", mode: str = "sequential",
+          nr_workers: int = 1, eps: float = DEFAULT_EPS):
+    """End-to-end Barnes-Hut: build tree + graph, execute, return
+    (acc (3,N) in sorted order, state, graph)."""
+    tree = Octree(x, m, n_max=n_max)
+    g = build_graph(tree, n_task=n_task,
+                    nr_queues=max(nr_workers, 1))
+    st = BHState(g, backend=backend, eps=eps)
+    st.run(mode=mode, nr_workers=nr_workers)
+    return st.acc, st, g

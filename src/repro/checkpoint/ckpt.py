@@ -1,0 +1,173 @@
+"""Fault-tolerant checkpointing.
+
+Properties a 1000-node run needs, all implemented and tested:
+  * **atomic**: leaves are written to ``step_<N>.tmp/`` and the directory is
+    ``os.rename``d into place only after an fsync'd manifest — a crash
+    mid-save never corrupts the latest checkpoint;
+  * **restartable**: ``latest_step`` + deterministic data pipeline
+    (``SyntheticTokens.batch_at(step)``) give bit-identical continuation
+    (tests/test_traincore.py::test_failure_recovery);
+  * **resharding restore**: leaves are saved as full (host-gathered) arrays
+    with their tree paths; ``restore_checkpoint`` re-places them under ANY
+    mesh/sharding (elastic scaling: save on mesh A, restore on mesh B);
+  * **async**: ``CheckpointManager(async_save=True)`` snapshots to host
+    memory synchronously (cheap) and writes in a background thread, so the
+    train loop is blocked only for the device→host copy;
+  * **retention**: keeps the newest ``keep`` checkpoints.
+
+Format: one ``.npy`` per leaf (path-encoded filename) + ``manifest.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "__".join(parts) or "leaf"
+
+
+def _flatten_with_names(tree: Pytree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_leaf_name(path), leaf) for path, leaf in leaves]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
+                    host_tree: Optional[list] = None) -> str:
+    """Write checkpoint atomically.  ``host_tree`` (from a prior snapshot)
+    skips the device→host copy (async path)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    named = host_tree if host_tree is not None else [
+        (n, np.asarray(l)) for n, l in _flatten_with_names(tree)]
+    manifest = {"step": step, "leaves": []}
+    for name, arr in named:
+        fn = f"{name}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fn, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Pytree,
+                       shardings: Optional[Pytree] = None) -> Pytree:
+    """Restore into the structure of ``like``; if ``shardings`` is given the
+    leaves are placed with those shardings (RESHARDING: the saved mesh is
+    irrelevant — elastic restarts on a different topology just work)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    names = [n for n, _ in _flatten_with_names(like)]
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(names))
+    out = []
+    for name, leaf, shd in zip(names, leaves_like, shard_leaves):
+        entry = by_name.get(name)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = np.load(os.path.join(path, entry["file"]))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {name}: ckpt {arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return treedef.unflatten(out)
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir: str, keep: int = 3,
+                 async_save: bool = False):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: Pytree) -> None:
+        self.wait()
+        if not self.async_save:
+            save_checkpoint(self.dir, step, tree)
+            self._gc()
+            return
+        # synchronous device→host snapshot, asynchronous disk write
+        host = [(n, np.asarray(l)) for n, l in _flatten_with_names(tree)]
+
+        def work():
+            try:
+                save_checkpoint(self.dir, step, None, host_tree=host)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1)) for d in os.listdir(self.dir)
+            if (m := re.fullmatch(r"step_(\d+)", d)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.dir)
+
+    def restore(self, step: int, like: Pytree,
+                shardings: Optional[Pytree] = None) -> Pytree:
+        return restore_checkpoint(self.dir, step, like, shardings)

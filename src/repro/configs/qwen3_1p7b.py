@@ -1,0 +1,16 @@
+"""qwen3-1.7b — dense GQA with qk-norm [hf:Qwen/Qwen3-8B; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=6144,
+    vocab=151936,
+    head_dim=128,
+    qk_norm=True,
+    attn_chunk=2048,
+)

@@ -1,0 +1,32 @@
+"""QuickSched core: task-based parallelism with dependencies and conflicts.
+
+Faithful JAX-era port of the paper's scheduler (see DESIGN.md §2 for the
+CPU→TPU adaptation map).
+"""
+
+from .graph import (
+    FLAG_NONE,
+    FLAG_VIRTUAL,
+    OWNER_NONE,
+    RES_NONE,
+    TASK_NONE,
+    QSched,
+    Resource,
+    Task,
+)
+from .locks import SeqLockManager, ThreadedLockManager, make_lock_manager
+from .queue import TaskQueue
+from .simulator import SimResult, TimelineEvent, scaling_curve, simulate
+from .static_sched import Round, conflict_rounds, list_schedule, validate_rounds
+from .weights import critical_path_length, critical_path_weights, toposort
+from .executors import SequentialExecutor, ThreadedExecutor
+
+__all__ = [
+    "QSched", "Task", "Resource", "TaskQueue",
+    "FLAG_NONE", "FLAG_VIRTUAL", "TASK_NONE", "RES_NONE", "OWNER_NONE",
+    "SeqLockManager", "ThreadedLockManager", "make_lock_manager",
+    "SimResult", "TimelineEvent", "simulate", "scaling_curve",
+    "Round", "conflict_rounds", "validate_rounds", "list_schedule",
+    "toposort", "critical_path_weights", "critical_path_length",
+    "SequentialExecutor", "ThreadedExecutor",
+]

@@ -1,0 +1,88 @@
+"""Host-side executors for a prepared QSched graph.
+
+* ``ThreadedExecutor`` — the paper's pthreads worker pool: one queue per
+  thread, spin(-ish) on gettask, execute, done.  Exercises the *threaded*
+  lock protocol (real mutex-emulated CAS).  Python's GIL serialises compute,
+  so this validates correctness, not speedup.
+* ``SequentialExecutor`` — a single worker draining the scheduler in
+  priority order; used to trace task bodies into a single jitted function
+  (tasks execute as jnp ops on traced values).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, List
+
+from .graph import FLAG_VIRTUAL, QSched
+
+
+class ThreadedExecutor:
+    def __init__(self, sched: QSched, nr_threads: int):
+        self.sched = sched
+        self.nr_threads = nr_threads
+        self.errors: List[BaseException] = []
+
+    def _worker(self, wid: int, fun: Callable[[int, Any], None]) -> None:
+        s = self.sched
+        qid = wid % s.nr_queues
+        try:
+            while True:
+                tid = s.gettask(qid, block=False)
+                if tid is None:
+                    if s.waiting <= 0:
+                        return
+                    time.sleep(1e-5)  # qsched_flag_yield analogue
+                    continue
+                t = s.tasks[tid]
+                if not (t.flags & FLAG_VIRTUAL):
+                    fun(t.type, t.data)
+                s.done(tid)
+        except BaseException as e:  # surface worker errors to the caller
+            self.errors.append(e)
+
+    def run(self, fun: Callable[[int, Any], None]) -> None:
+        self.sched.start(threaded=True)
+        threads = [
+            threading.Thread(target=self._worker, args=(w, fun), daemon=True)
+            for w in range(self.nr_threads)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if self.errors:
+            raise self.errors[0]
+        if self.sched.waiting > 0:
+            raise RuntimeError(
+                f"{self.sched.waiting} tasks unexecuted (deadlock?)")
+        assert self.sched.lockmgr.all_free(), "resources left locked"
+
+
+class SequentialExecutor:
+    """Drain the scheduler with one worker.  Because tasks run in the
+    scheduler's priority order and ``fun`` may operate on traced JAX values,
+    wrapping ``run`` in ``jax.jit`` turns the whole task graph into a single
+    XLA program whose op order follows the QuickSched schedule."""
+
+    def __init__(self, sched: QSched):
+        self.sched = sched
+
+    def run(self, fun: Callable[[int, Any], None]) -> List[int]:
+        s = self.sched
+        s.start(threaded=False)
+        order: List[int] = []
+        while True:
+            tid = s.gettask(0, block=False)
+            if tid is None:
+                if s.waiting <= 0:
+                    break
+                raise RuntimeError(
+                    f"no runnable task with {s.waiting} waiting (deadlock)")
+            t = s.tasks[tid]
+            if not (t.flags & FLAG_VIRTUAL):
+                fun(t.type, t.data)
+            order.append(tid)
+            s.done(tid)
+        return order

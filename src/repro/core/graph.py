@@ -1,0 +1,288 @@
+"""The qsched object: tasks, resources, dependencies, conflicts (paper §3.1–3.4).
+
+The full task graph is constructed explicitly *before* execution
+(``addtask`` / ``addres`` / ``addlock`` / ``adduse`` / ``addunlock``), then
+``prepare()`` computes wait counters and critical-path weights.  Execution
+engines (simulator, threaded executor, static scheduler) drive the same
+``start`` / ``gettask`` / ``done`` protocol.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence
+
+from .locks import BaseLockManager, make_lock_manager
+from .queue import TaskQueue
+from .weights import critical_path_weights
+
+TASK_NONE = -1
+RES_NONE = -1
+OWNER_NONE = -1
+
+FLAG_NONE = 0
+FLAG_VIRTUAL = 1  # grouping-only task: scheduled but not passed to fun
+
+
+@dataclass
+class Task:
+    tid: int
+    type: int
+    data: Any
+    cost: float
+    flags: int = FLAG_NONE
+    unlocks: List[int] = field(default_factory=list)  # tasks this task unlocks
+    locks: List[int] = field(default_factory=list)    # resources to lock (conflicts)
+    uses: List[int] = field(default_factory=list)     # resources used (affinity only)
+    wait: int = 0                                     # unresolved dependencies
+    weight: float = 0.0                               # critical-path weight
+
+
+@dataclass
+class Resource:
+    rid: int
+    parent: int = RES_NONE
+    owner: int = OWNER_NONE  # queue that last used this resource
+
+
+class QSched:
+    """Task scheduler with dependencies and conflicts.
+
+    ``reown=True`` re-assigns resource ownership to the stealing queue
+    (paper §3.4); the QR benchmark enables it, Barnes-Hut disables it.
+    """
+
+    def __init__(self, nr_queues: int = 1, reown: bool = True,
+                 seed: int = 0):
+        self.tasks: List[Task] = []
+        self.resources: List[Resource] = []
+        self.nr_queues = nr_queues
+        self.reown = reown
+        self._rng = random.Random(seed)
+        self._prepared = False
+        # populated by prepare()/start():
+        self.lockmgr: Optional[BaseLockManager] = None
+        self.queues: List[TaskQueue] = []
+        self.waiting = 0
+        self._waiting_mutex = threading.Lock()
+        self.topo_order: List[int] = []
+        # bookkeeping for benchmarks
+        self.steals = 0
+        self.gettask_calls = 0
+
+    # -- graph construction (paper appendix A API) --------------------------
+    def addtask(self, type: int = 0, data: Any = None, cost: float = 1.0,
+                flags: int = FLAG_NONE) -> int:
+        tid = len(self.tasks)
+        self.tasks.append(Task(tid, type, data, float(cost), flags))
+        self._prepared = False
+        return tid
+
+    def addres(self, owner: int = OWNER_NONE, parent: int = RES_NONE) -> int:
+        rid = len(self.resources)
+        if parent != RES_NONE and not (0 <= parent < rid):
+            raise ValueError(f"invalid parent resource {parent}")
+        self.resources.append(Resource(rid, parent, owner))
+        return rid
+
+    def addlock(self, t: int, r: int) -> None:
+        self.tasks[t].locks.append(r)
+        self._prepared = False
+
+    def adduse(self, t: int, r: int) -> None:
+        self.tasks[t].uses.append(r)
+
+    def addunlock(self, ta: int, tb: int) -> None:
+        """tb depends on ta (ta unlocks tb)."""
+        if ta == tb:
+            raise ValueError("task cannot depend on itself")
+        self.tasks[ta].unlocks.append(tb)
+        self._prepared = False
+
+    # -- derived structure ----------------------------------------------------
+    @property
+    def nr_tasks(self) -> int:
+        return len(self.tasks)
+
+    @property
+    def nr_deps(self) -> int:
+        return sum(len(t.unlocks) for t in self.tasks)
+
+    @property
+    def nr_locks(self) -> int:
+        return sum(len(t.locks) for t in self.tasks)
+
+    @property
+    def nr_uses(self) -> int:
+        return sum(len(t.uses) for t in self.tasks)
+
+    def set_costs(self, costs: Sequence[float]) -> None:
+        """Feed back measured task costs (the paper: 'the actual cost of the
+        same task last time it was executed')."""
+        for t, c in zip(self.tasks, costs):
+            t.cost = float(c)
+        self._prepared = False
+
+    def prepare(self) -> None:
+        """Compute wait counters + critical-path weights; sort each task's
+        locks by resource id (deadlock avoidance, paper §3.3)."""
+        n = self.nr_tasks
+        unlocks = [t.unlocks for t in self.tasks]
+        costs = [t.cost for t in self.tasks]
+        weights, order = critical_path_weights(n, unlocks, costs)
+        for t, w in zip(self.tasks, weights):
+            t.weight = w
+            t.wait = 0
+            t.locks.sort()
+        for t in self.tasks:
+            for j in t.unlocks:
+                self.tasks[j].wait += 1
+        self.topo_order = order
+        self._prepared = True
+
+    # -- execution protocol (paper §3.4) ---------------------------------------
+    def start(self, threaded: bool = False) -> None:
+        """qsched_start: build lock manager + queues, enqueue ready tasks."""
+        if not self._prepared:
+            self.prepare()
+        parents = [r.parent for r in self.resources]
+        self.lockmgr = make_lock_manager(parents, threaded)
+        wtab = [t.weight for t in self.tasks]
+        self.queues = [TaskQueue(wtab, threaded) for _ in range(self.nr_queues)]
+        self.waiting = self.nr_tasks
+        self.steals = 0
+        self.gettask_calls = 0
+        # wait counters were set by prepare(); recompute in case of rerun
+        for t in self.tasks:
+            t.wait = 0
+        for t in self.tasks:
+            for j in t.unlocks:
+                self.tasks[j].wait += 1
+        for t in self.tasks:
+            if t.wait == 0:
+                self.enqueue(t.tid)
+
+    def enqueue(self, tid: int) -> None:
+        """qsched_enqueue: score queues by how many of the task's resources
+        they own; send the task to the highest-scoring queue."""
+        t = self.tasks[tid]
+        score = [0] * self.nr_queues
+        best = 0
+        for r in t.locks:
+            o = self.resources[r].owner
+            if o != OWNER_NONE:
+                score[o] += 1
+                if score[o] > score[best]:
+                    best = o
+        for r in t.uses:
+            o = self.resources[r].owner
+            if o != OWNER_NONE:
+                score[o] += 1
+                if score[o] > score[best]:
+                    best = o
+        self.queues[best].put(tid)
+
+    def _try_lock_task(self, tid: int) -> bool:
+        return self.lockmgr.lock_all(self.tasks[tid].locks)
+
+    def gettask(self, qid: int, block: bool = False) -> Optional[int]:
+        """qsched_gettask: preferred queue first, then work-steal from the
+        other queues in random order.  Non-blocking by default (the
+        simulator retries on events); ``block`` spins like the paper's
+        OpenMP loop and is used by the threaded executor."""
+        while True:
+            self.gettask_calls += 1
+            if self.waiting <= 0:
+                return None
+            tid = self.queues[qid].get(self._try_lock_task)
+            if tid is None and self.nr_queues > 1:
+                others = [k for k in range(self.nr_queues) if k != qid]
+                self._rng.shuffle(others)
+                for k in others:
+                    tid = self.queues[k].get(self._try_lock_task)
+                    if tid is not None:
+                        self.steals += 1
+                        break
+            if tid is not None:
+                if self.reown:
+                    t = self.tasks[tid]
+                    for r in t.locks:
+                        self.resources[r].owner = qid
+                    for r in t.uses:
+                        self.resources[r].owner = qid
+                return tid
+            if not block:
+                return None
+
+    def done(self, tid: int) -> List[int]:
+        """qsched_done: release resources, unlock dependents, enqueue any
+        whose wait hits zero.  Returns the newly-released task ids."""
+        t = self.tasks[tid]
+        self.lockmgr.unlock_all(t.locks)
+        released: List[int] = []
+        for j in t.unlocks:
+            dep = self.tasks[j]
+            with self._waiting_mutex:
+                dep.wait -= 1
+                ready = dep.wait == 0
+            if ready:
+                self.enqueue(j)
+                released.append(j)
+        with self._waiting_mutex:
+            self.waiting -= 1
+        return released
+
+    # -- convenience -----------------------------------------------------------
+    def run_threaded(self, nr_threads: int, fun: Callable[[int, Any], None]) -> None:
+        """qsched_run with a pthread-style pool (paper §3.4).  ``fun`` is
+        called as fun(type, data) for every non-virtual task."""
+        from .executors import ThreadedExecutor
+
+        ThreadedExecutor(self, nr_threads).run(fun)
+
+    def validate_schedule(self, timeline) -> None:
+        """Assert a (task, worker, t0, t1) timeline respects dependencies and
+        conflicts — used by tests and the property suite."""
+        start = {e.tid: e.t0 for e in timeline}
+        end = {e.tid: e.t1 for e in timeline}
+        assert len(start) == self.nr_tasks, "not all tasks executed"
+        for t in self.tasks:
+            for j in t.unlocks:
+                assert start[j] >= end[t.tid] - 1e-9, (
+                    f"dependency violated: {j} started {start[j]} before "
+                    f"{t.tid} finished {end[t.tid]}"
+                )
+        # conflicts: tasks locking overlapping resource subtrees must not
+        # overlap in time.  Expand each task's locks to cover descendants via
+        # ancestor chains: two tasks conflict iff one's locked resource is an
+        # ancestor-or-self of the other's.
+        anc = {}
+        parents = [r.parent for r in self.resources]
+
+        def ancestors(r):
+            if r not in anc:
+                chain = set()
+                u = r
+                while u != RES_NONE:
+                    chain.add(u)
+                    u = parents[u]
+                anc[r] = chain
+            return anc[r]
+
+        by_res = {}
+        for e in timeline:
+            for r in self.tasks[e.tid].locks:
+                for a in ancestors(r):
+                    by_res.setdefault(a, []).append(e)
+        for r, evs in by_res.items():
+            evs.sort(key=lambda e: e.t0)
+            for a, b in zip(evs, evs[1:]):
+                # siblings both holding ancestor r do not conflict; only
+                # pairs where one locks r itself do.
+                if r in self.tasks[a.tid].locks or r in self.tasks[b.tid].locks:
+                    assert b.t0 >= a.t1 - 1e-9, (
+                        f"conflict violated on resource {r}: tasks "
+                        f"{a.tid}@[{a.t0},{a.t1}) and {b.tid}@[{b.t0},{b.t1})"
+                    )

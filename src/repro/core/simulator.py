@@ -1,0 +1,132 @@
+"""Discrete-event simulation of the QuickSched execution protocol.
+
+This container has a single CPU core, so the paper's 64-core wall-clock
+scaling (Figs 8, 11) cannot be measured directly.  The simulator drives the
+*identical* scheduler code path (queues, hierarchical locks, critical-path
+priorities, work stealing, re-owning) with virtual time: a worker that
+obtains a task occupies it for ``cost / speed`` time units, holding its
+resource locks for the duration.  The resulting makespans give the
+scheduler-limited strong-scaling curves, directly comparable to the paper's
+(minus hardware effects like the Opteron L2 sharing, which the paper itself
+excludes from scheduler quality).
+
+``overhead`` models the per-gettask scheduler cost (paper Fig 13 reports it
+at < 1 % of total time on 64 cores).
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .graph import FLAG_VIRTUAL, QSched
+
+
+@dataclass
+class TimelineEvent:
+    tid: int
+    worker: int
+    t0: float
+    t1: float
+    type: int = 0
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    timeline: List[TimelineEvent]
+    nr_workers: int
+    busy: List[float]
+    per_type_cost: Dict[int, float]
+    overhead_time: float
+    steals: int
+    gettask_calls: int
+
+    @property
+    def total_cost(self) -> float:
+        return sum(e.t1 - e.t0 for e in self.timeline)
+
+    def efficiency(self, serial_time: Optional[float] = None) -> float:
+        t1 = serial_time if serial_time is not None else self.total_cost
+        return t1 / (self.nr_workers * self.makespan)
+
+    def speedup(self, serial_time: Optional[float] = None) -> float:
+        t1 = serial_time if serial_time is not None else self.total_cost
+        return t1 / self.makespan
+
+
+def simulate(sched: QSched, nr_workers: int, overhead: float = 0.0,
+             speed: float = 1.0) -> SimResult:
+    """Simulate ``sched`` on ``nr_workers`` workers.  ``sched.nr_queues``
+    should equal ``nr_workers`` for the paper's one-queue-per-core setup
+    (but any combination is allowed)."""
+    sched.start(threaded=False)
+    timeline: List[TimelineEvent] = []
+    busy = [0.0] * nr_workers
+    per_type: Dict[int, float] = {}
+    overhead_time = 0.0
+
+    # (finish_time, seq, worker, tid) — seq breaks ties deterministically
+    running: List = []
+    seq = 0
+    now = 0.0
+    idle = list(range(nr_workers))
+
+    def try_dispatch():
+        nonlocal seq, overhead_time
+        # keep handing tasks to idle workers until none can get one
+        progress = True
+        while idle and progress:
+            progress = False
+            for w in list(idle):
+                qid = w % sched.nr_queues
+                tid = sched.gettask(qid, block=False)
+                overhead_time += overhead
+                if tid is not None:
+                    t = sched.tasks[tid]
+                    dur = t.cost / speed + overhead
+                    heapq.heappush(running, (now + dur, seq, w, tid))
+                    seq += 1
+                    idle.remove(w)
+                    timeline.append(
+                        TimelineEvent(tid, w, now, now + dur, t.type))
+                    busy[w] += dur
+                    per_type[t.type] = per_type.get(t.type, 0.0) + dur
+                    progress = True
+
+    try_dispatch()
+    while running:
+        now, _, w, tid = heapq.heappop(running)
+        sched.done(tid)
+        idle.append(w)
+        try_dispatch()
+
+    if sched.waiting > 0:
+        raise RuntimeError(
+            f"simulation deadlocked with {sched.waiting} tasks unexecuted")
+    return SimResult(
+        makespan=now,
+        timeline=timeline,
+        nr_workers=nr_workers,
+        busy=busy,
+        per_type_cost=per_type,
+        overhead_time=overhead_time,
+        steals=sched.steals,
+        gettask_calls=sched.gettask_calls,
+    )
+
+
+def scaling_curve(make_sched, worker_counts, overhead: float = 0.0):
+    """Run ``simulate`` for each worker count; ``make_sched(n)`` must return
+    a fresh prepared QSched with n queues.  Returns list of
+    (n, makespan, speedup, efficiency) using the 1-worker makespan as T1."""
+    rows = []
+    t1 = None
+    for n in worker_counts:
+        res = simulate(make_sched(n), n, overhead=overhead)
+        if t1 is None:
+            t1 = res.makespan if n == 1 else res.total_cost
+        rows.append((n, res.makespan, t1 / res.makespan,
+                     t1 / (n * res.makespan)))
+    return rows

@@ -1,0 +1,119 @@
+"""Static conflict-aware schedules for SPMD execution.
+
+On a TPU there is no runtime lock — the compiled program is bulk
+synchronous.  The QuickSched insight (the whole DAG is known up front)
+becomes: *prove at schedule time* that no two conflicting tasks overlap.
+
+``conflict_rounds`` partitions the task graph into rounds: every task in a
+round has all dependencies in strictly earlier rounds, and no two tasks in a
+round lock overlapping resource subtrees.  Each round then executes as one
+SPMD step (every mesh lane runs its assigned tasks); inter-round data motion
+is explicit.  Task → lane assignment inside a round follows resource
+ownership (the cache-affinity analogue) with greedy load balancing
+(the work-stealing analogue).
+
+``list_schedule`` wraps the discrete-event simulator to produce a
+worker-timed schedule (used for pipeline-parallel synthesis, where stage
+lanes are the workers).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from .graph import OWNER_NONE, QSched
+from .locks import SeqLockManager
+from .simulator import SimResult, simulate
+
+
+@dataclass
+class Round:
+    tasks: List[int]               # task ids in this round
+    lanes: Dict[int, List[int]]    # lane -> ordered task ids
+
+
+def conflict_rounds(sched: QSched, nr_lanes: int,
+                    max_tasks_per_round: Optional[int] = None) -> List[Round]:
+    if not sched._prepared:
+        sched.prepare()
+    tasks = sched.tasks
+    n = len(tasks)
+    cap = max_tasks_per_round or n
+    wait = [0] * n
+    for t in tasks:
+        for j in t.unlocks:
+            wait[j] += 1
+    ready = sorted((i for i in range(n) if wait[i] == 0),
+                   key=lambda i: -tasks[i].weight)
+    parents = [r.parent for r in sched.resources]
+    owners = [r.owner for r in sched.resources]
+    rounds: List[Round] = []
+    done = 0
+    while done < n:
+        lm = SeqLockManager(parents)  # fresh lock state per round
+        chosen: List[int] = []
+        skipped: List[int] = []
+        for tid in ready:
+            if len(chosen) >= cap:
+                skipped.append(tid)
+                continue
+            if lm.lock_all(tasks[tid].locks):
+                chosen.append(tid)
+            else:
+                skipped.append(tid)
+        if not chosen:
+            raise RuntimeError("static schedule stalled (conflict deadlock?)")
+        # lane assignment: prefer the owner of the task's first owned
+        # resource; spill to the least-loaded lane.
+        load = [0.0] * nr_lanes
+        lanes: Dict[int, List[int]] = {l: [] for l in range(nr_lanes)}
+        for tid in sorted(chosen, key=lambda i: -tasks[i].weight):
+            lane = -1
+            for r in tasks[tid].locks + tasks[tid].uses:
+                o = owners[r]
+                if o != OWNER_NONE and 0 <= o < nr_lanes:
+                    lane = o
+                    break
+            least = min(range(nr_lanes), key=lambda l: load[l])
+            if lane == -1 or load[lane] > 2.0 * max(load[least], 1e-12) + 1e-12:
+                lane = least  # steal: owner lane overloaded
+            lanes[lane].append(tid)
+            load[lane] += tasks[tid].cost
+            for r in tasks[tid].locks + tasks[tid].uses:
+                owners[r] = lane
+        rounds.append(Round(chosen, lanes))
+        done += len(chosen)
+        # release deps
+        newly = []
+        for tid in chosen:
+            for j in tasks[tid].unlocks:
+                wait[j] -= 1
+                if wait[j] == 0:
+                    newly.append(j)
+        ready = sorted(skipped + newly, key=lambda i: -tasks[i].weight)
+    return rounds
+
+
+def validate_rounds(sched: QSched, rounds: List[Round]) -> None:
+    """Dependencies strictly cross rounds; conflicts never share a round."""
+    pos = {}
+    for k, rnd in enumerate(rounds):
+        for tid in rnd.tasks:
+            assert tid not in pos, f"task {tid} scheduled twice"
+            pos[tid] = k
+    assert len(pos) == sched.nr_tasks, "missing tasks in rounds"
+    for t in sched.tasks:
+        for j in t.unlocks:
+            assert pos[j] > pos[t.tid], f"dep {t.tid}->{j} within/behind round"
+    parents = [r.parent for r in sched.resources]
+    for rnd in rounds:
+        lm = SeqLockManager(parents)
+        for tid in rnd.tasks:
+            assert lm.lock_all(sched.tasks[tid].locks), (
+                f"conflicting tasks share round: {rnd.tasks}")
+
+
+def list_schedule(sched: QSched, nr_workers: int) -> SimResult:
+    """Worker-timed static schedule via the discrete-event engine."""
+    return simulate(sched, nr_workers)

@@ -1,0 +1,53 @@
+"""Public op: model-layout wrapper for the flash-attention kernel.
+
+Accepts (B, S, H, hd) like the model's sdpa paths, pads S to block
+multiples with masked-out rows, flattens (B,H) into the kernel grid."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention_bshd(q, k, v, causal: bool = True,
+                         block_q: int = 128, block_k: int = 128):
+    """q,k,v: (B, S, H, hd) → (B, S, H, hd)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
+
+    qf, kf, vf = to_bh(q), to_bh(k), to_bh(v)
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        # padded keys must never win the softmax: zero K with a causal row
+        # index beyond every query works for causal; for non-causal we add
+        # an explicit -inf bias by padding K with +inf-distance rows, which
+        # the kernel's masking cannot see — so fall back to exact sizes.
+        assert causal or pk == 0, "non-causal requires Sk % block_k == 0"
+        kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+    o = kernel.flash_attention(qf, kf, vf, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+    o = o[:, :sq]
+    return o.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+def attention_ref_bshd(q, k, v, causal: bool = True):
+    b, sq, h, hd = q.shape
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
+
+    o = ref.attention_ref(to_bh(q), to_bh(k), to_bh(v), causal=causal)
+    return o.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

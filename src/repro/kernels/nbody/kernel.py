@@ -1,0 +1,111 @@
+"""Pallas TPU kernels for the Barnes-Hut interaction tasks (paper §4.2).
+
+The hot spots are the particle-particle tasks (self and pair): dense
+(Ni × Nj) interaction blocks.  TPU adaptation (DESIGN.md §2):
+
+  * layout is (3, N): coordinates live in the 8-sublane dim, particles in
+    the 128-lane dim;
+  * the i-side is tiled by ``TILE_I`` (grid dim 0) with the full j-side
+    resident in VMEM — a task's j-side is a cell of ≤ n_task ≈ 5000
+    particles ≈ 80 KiB, far under VMEM;
+  * inputs are zero-mass padded to lane multiples by ops.py, so no masking
+    is needed for ragged sizes (a zero-mass source contributes nothing);
+  * the self kernel masks the i==j diagonal via the grid offset.
+
+The (Ni × Nj) force evaluation is VPU element-wise work with an MXU-free
+inner product over the 3 coordinate planes (unrolled), which keeps the
+arithmetic intensity at ~O(Nj) flops per byte of i-side traffic — the same
+compute-per-memory-access argument the paper makes for task granularity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DEFAULT_EPS
+
+TILE_I = 128
+
+
+def _acc_block(xi, xj, mj_row, eps):
+    """xi: (3,TI), xj: (3,NJ), mj_row: (1,NJ) → acc (3,TI) and w (TI,NJ)."""
+    ti = xi.shape[1]
+    nj = xj.shape[1]
+    dx0 = xj[0].reshape(1, nj) - xi[0].reshape(ti, 1)
+    dx1 = xj[1].reshape(1, nj) - xi[1].reshape(ti, 1)
+    dx2 = xj[2].reshape(1, nj) - xi[2].reshape(ti, 1)
+    r2 = dx0 * dx0 + dx1 * dx1 + dx2 * dx2 + eps * eps
+    w = jax.lax.rsqrt(r2)
+    w = w * w * w * mj_row                       # m_j / r^3, (TI, NJ)
+    return dx0, dx1, dx2, w
+
+
+def _pair_kernel(xi_ref, xj_ref, mj_ref, out_ref, *, eps):
+    xi = xi_ref[...]
+    dx0, dx1, dx2, w = _acc_block(xi, xj_ref[...], mj_ref[...], eps)
+    out_ref[...] = jnp.stack([
+        jnp.sum(dx0 * w, axis=1),
+        jnp.sum(dx1 * w, axis=1),
+        jnp.sum(dx2 * w, axis=1),
+    ])
+
+
+def _self_kernel(x_ref, m_ref, xi_ref, out_ref, *, eps):
+    i = pl.program_id(0)
+    ti = xi_ref.shape[1]
+    nj = x_ref.shape[1]
+    xi = xi_ref[...]
+    dx0, dx1, dx2, w = _acc_block(xi, x_ref[...], m_ref[...], eps)
+    gi = i * ti + jax.lax.broadcasted_iota(jnp.int32, (ti, 1), 0)
+    gj = jax.lax.broadcasted_iota(jnp.int32, (1, nj), 1)
+    w = jnp.where(gi == gj, jnp.zeros_like(w), w)   # exclude self-pairs
+    out_ref[...] = jnp.stack([
+        jnp.sum(dx0 * w, axis=1),
+        jnp.sum(dx1 * w, axis=1),
+        jnp.sum(dx2 * w, axis=1),
+    ])
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def acc_pair(xi, xj, mj, *, eps: float = DEFAULT_EPS, interpret: bool = True):
+    """xi (3,Ni), xj (3,Nj), mj (Nj,); Ni, Nj multiples of TILE_I/lane size
+    (ops.py pads).  Returns (3,Ni) accelerations on the i side."""
+    ni, nj = xi.shape[1], xj.shape[1]
+    grid = (ni // TILE_I,) if ni % TILE_I == 0 else (1,)
+    ti = TILE_I if ni % TILE_I == 0 else ni
+    return pl.pallas_call(
+        functools.partial(_pair_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3, ti), lambda i: (0, i)),
+            pl.BlockSpec((3, nj), lambda i: (0, 0)),
+            pl.BlockSpec((1, nj), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((3, ti), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((3, ni), xi.dtype),
+        interpret=interpret,
+    )(xi, xj, mj.reshape(1, nj))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def acc_self(x, m, *, eps: float = DEFAULT_EPS, interpret: bool = True):
+    """All-pairs within one set (3,N), diagonal excluded."""
+    n = x.shape[1]
+    grid = (n // TILE_I,) if n % TILE_I == 0 else (1,)
+    ti = TILE_I if n % TILE_I == 0 else n
+    return pl.pallas_call(
+        functools.partial(_self_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((3, ti), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((3, ti), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((3, n), x.dtype),
+        interpret=interpret,
+    )(x, m.reshape(1, n), x)

@@ -1,0 +1,43 @@
+"""Public ops for the N-body kernels: zero-mass padding to lane multiples +
+backend dispatch (Pallas kernel vs jnp oracle)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+from .ref import DEFAULT_EPS
+
+LANE = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_lane(a: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Pad the last dim up to a LANE multiple (zeros)."""
+    target = max(LANE, ((n + LANE - 1) // LANE) * LANE)
+    if target == n:
+        return a
+    pad = [(0, 0)] * (a.ndim - 1) + [(0, target - n)]
+    return jnp.pad(a, pad)
+
+
+def acc_pair(xi, xj, mj, eps: float = DEFAULT_EPS, backend: str = "pallas"):
+    if backend == "ref":
+        return ref.acc_pair_ref(xi, xj, mj, eps)
+    ni, nj = xi.shape[1], xj.shape[1]
+    out = kernel.acc_pair(_pad_lane(xi, ni), _pad_lane(xj, nj),
+                          _pad_lane(mj, nj), eps=eps, interpret=_interpret())
+    return out[:, :ni]
+
+
+def acc_self(x, m, eps: float = DEFAULT_EPS, backend: str = "pallas"):
+    if backend == "ref":
+        return ref.acc_self_ref(x, m, eps)
+    n = x.shape[1]
+    out = kernel.acc_self(_pad_lane(x, n), _pad_lane(m, n), eps=eps,
+                          interpret=_interpret())
+    return out[:, :n]

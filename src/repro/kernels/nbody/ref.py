@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the N-body interaction kernels (paper §4.2).
+
+Plummer-softened gravity, G = 1:
+    a_i += m_j (x_j - x_i) / (|x_j - x_i|^2 + eps^2)^{3/2}
+
+Layout is (3, N) — coordinates in the sublane dim, particles in the lane
+dim — the TPU-native choice (N is the 128-multiple vector axis).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DEFAULT_EPS = 1e-4
+
+
+def acc_pair_ref(xi: jnp.ndarray, xj: jnp.ndarray, mj: jnp.ndarray,
+                 eps: float = DEFAULT_EPS) -> jnp.ndarray:
+    """Accelerations on particles ``xi`` (3,Ni) due to sources ``xj``
+    (3,Nj) with masses ``mj`` (Nj,).  No self-exclusion (disjoint sets)."""
+    dx = xj[:, None, :] - xi[:, :, None]          # (3, Ni, Nj)
+    r2 = jnp.sum(dx * dx, axis=0) + eps * eps     # (Ni, Nj)
+    inv_r3 = r2 ** -1.5
+    w = inv_r3 * mj[None, :]                      # (Ni, Nj)
+    return jnp.einsum("dij,ij->di", dx, w)        # (3, Ni)
+
+
+def acc_self_ref(x: jnp.ndarray, m: jnp.ndarray,
+                 eps: float = DEFAULT_EPS) -> jnp.ndarray:
+    """All-pairs accelerations within one set, self-pairs excluded."""
+    n = x.shape[1]
+    dx = x[:, None, :] - x[:, :, None]            # (3, N, N)
+    r2 = jnp.sum(dx * dx, axis=0) + eps * eps
+    inv_r3 = r2 ** -1.5
+    mask = 1.0 - jnp.eye(n, dtype=x.dtype)
+    w = inv_r3 * m[None, :] * mask
+    return jnp.einsum("dij,ij->di", dx, w)
+
+
+def acc_direct_ref(x: jnp.ndarray, m: jnp.ndarray,
+                   eps: float = DEFAULT_EPS) -> jnp.ndarray:
+    """O(N^2) direct sum over the whole particle set — the ground truth the
+    Barnes-Hut approximation is measured against."""
+    return acc_self_ref(x, m, eps)

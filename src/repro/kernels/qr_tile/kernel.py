@@ -1,0 +1,202 @@
+"""Pallas TPU kernels for the four tiled-QR operations (paper §4.1).
+
+Each kernel operates on one (b,b) tile resident in VMEM (b=64 → 16 KiB per
+buffer in fp32, far under the ~16 MiB VMEM budget; b=128 is the
+MXU-aligned production tile).  The panel factorizations (geqrf, tsqrf) are
+column-recurrence loops — VPU-bound rank-1 updates expressed with 2-D masks
+(TPU iota must be ≥2-D) — while the *apply* kernels (larft, ssrft) are pure
+matmul chains that run on the MXU; in the tiled algorithm the applies
+dominate the flop count (O(N²) applies vs O(N) factorizations per level),
+which is exactly why this decomposition suits the TPU.
+
+Validated against ``ref.py`` in interpret mode (tests/test_kernels_qr.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _iotas(b: int):
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
+    return rows, cols
+
+
+def _householder(alpha, sigma2, dtype):
+    zero = sigma2 == 0.0
+    sign = jnp.where(alpha >= 0.0, jnp.asarray(1.0, dtype),
+                     jnp.asarray(-1.0, dtype))
+    beta = jnp.where(zero, alpha, -sign * jnp.sqrt(alpha * alpha + sigma2))
+    tau = jnp.where(zero, jnp.asarray(0.0, dtype),
+                    (beta - alpha) / jnp.where(zero, jnp.asarray(1.0, dtype), beta))
+    denom = alpha - beta
+    inv = jnp.where(zero, jnp.asarray(0.0, dtype),
+                    1.0 / jnp.where(denom == 0.0, jnp.asarray(1.0, dtype), denom))
+    return beta, tau, inv
+
+
+def _geqrf_kernel(a_ref, rv_ref, tau_ref, t_ref):
+    b = a_ref.shape[0]
+    dtype = a_ref.dtype
+    rows, cols = _iotas(b)
+
+    def body(j, carry):
+        a, v_acc, taus, t = carry
+        colmask = (cols == j).astype(dtype)            # (1,b)
+        rowpick = (rows == j).astype(dtype)            # (b,1)
+        below = (rows > j).astype(dtype)               # (b,1)
+        x = jnp.sum(a * colmask, axis=1, keepdims=True)  # column j, (b,1)
+        alpha = jnp.sum(x * rowpick)
+        sigma2 = jnp.sum((x * below) ** 2)
+        beta, tau, inv = _householder(alpha, sigma2, dtype)
+        v = x * below * inv + rowpick                  # (b,1), v[j] = 1
+        w = tau * (v.T @ a)                            # (1,b) MXU matvec
+        w = w * (cols > j).astype(dtype)               # trailing columns only
+        a = a - v @ w
+        # column j: R above the diagonal, beta on it, v below it
+        newcol = x * (rows < j).astype(dtype) + beta * rowpick + v * below
+        a = jnp.where(cols == j, newcol, a)
+        # T recurrence: u = V^T v (columns >= j of V are still zero)
+        u = v_acc.T @ v                                # (b,1)
+        tcol = -tau * (t @ u) + tau * rowpick
+        t = jnp.where(cols == j, tcol, t)
+        v_acc = jnp.where(cols == j, v, v_acc)
+        taus = jnp.where(cols == j, tau, taus)
+        return a, v_acc, taus, t
+
+    a0 = a_ref[...]
+    z = jnp.zeros((b, b), dtype)
+    a, _, taus, t = jax.lax.fori_loop(
+        0, b, body, (a0, z, jnp.zeros((1, b), dtype), z))
+    rv_ref[...] = a
+    tau_ref[...] = taus
+    t_ref[...] = t
+
+
+def _tsqrf_kernel(r_ref, a_ref, r_out_ref, v2_ref, tau_ref, t_ref):
+    b = r_ref.shape[0]
+    dtype = r_ref.dtype
+    rows, cols = _iotas(b)
+
+    def body(j, carry):
+        r, a, v2, taus, t = carry
+        colmask = (cols == j).astype(dtype)
+        rowpick = (rows == j).astype(dtype)            # (b,1)
+        alpha = jnp.sum(r * ((rows == j) & (cols == j)).astype(dtype))
+        x = jnp.sum(a * colmask, axis=1, keepdims=True)  # (b,1)
+        sigma2 = jnp.sum(x * x)
+        beta, tau, inv = _householder(alpha, sigma2, dtype)
+        v = x * inv                                    # (b,1) bottom block
+        rrow = jnp.sum(r * (rows == j).astype(dtype), axis=0, keepdims=True)
+        w = rrow + v.T @ a                             # (1,b)
+        r = r - tau * (rowpick @ w)                    # only row j changes
+        a = a - tau * (v @ w)
+        r = jnp.where((rows == j) & (cols == j), beta, r)
+        a = a * (cols != j).astype(dtype)              # column j eliminated
+        # T recurrence over the dense bottom blocks only
+        u = v2.T @ v
+        tcol = -tau * (t @ u) + tau * rowpick
+        t = jnp.where(cols == j, tcol, t)
+        v2 = jnp.where(cols == j, v, v2)
+        taus = jnp.where(cols == j, tau, taus)
+        return r, a, v2, taus, t
+
+    z = jnp.zeros((b, b), dtype)
+    r, _, v2, taus, t = jax.lax.fori_loop(
+        0, b, body, (r_ref[...], a_ref[...], z, jnp.zeros((1, b), dtype), z))
+    r_out_ref[...] = r
+    v2_ref[...] = v2
+    tau_ref[...] = taus
+    t_ref[...] = t
+
+
+def _apply_qt_kernel(rv_ref, t_ref, c_ref, out_ref):
+    b = rv_ref.shape[0]
+    dtype = rv_ref.dtype
+    rows, cols = _iotas(b)
+    v = jnp.where(rows > cols, rv_ref[...], jnp.zeros((b, b), dtype))
+    v = v + (rows == cols).astype(dtype)
+    c = c_ref[...]
+    out_ref[...] = c - v @ (t_ref[...].T @ (v.T @ c))
+
+
+def _apply_tsqt_kernel(v2_ref, t_ref, c1_ref, c2_ref, o1_ref, o2_ref):
+    v2 = v2_ref[...]
+    c1, c2 = c1_ref[...], c2_ref[...]
+    w = t_ref[...].T @ (c1 + v2.T @ c2)
+    o1_ref[...] = c1 - w
+    o2_ref[...] = c2 - v2 @ w
+
+
+def _tile_spec(shape):
+    """Whole-tile VMEM block (the tile is the unit of work; the task
+    scheduler, not the grid, provides the outer parallelism)."""
+    return pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def geqrf(a, *, interpret: bool = True):
+    b = a.shape[-1]
+    d = a.dtype
+    rv, tau, t = pl.pallas_call(
+        _geqrf_kernel,
+        grid=(),
+        in_specs=[_tile_spec((b, b))],
+        out_specs=(_tile_spec((b, b)), _tile_spec((1, b)), _tile_spec((b, b))),
+        out_shape=(jax.ShapeDtypeStruct((b, b), d),
+                   jax.ShapeDtypeStruct((1, b), d),
+                   jax.ShapeDtypeStruct((b, b), d)),
+        interpret=interpret,
+    )(a)
+    return rv, tau[0], t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tsqrf(r, a, *, interpret: bool = True):
+    b = a.shape[-1]
+    d = a.dtype
+    r1, v2, tau, t = pl.pallas_call(
+        _tsqrf_kernel,
+        grid=(),
+        in_specs=[_tile_spec((b, b))] * 2,
+        out_specs=(_tile_spec((b, b)), _tile_spec((b, b)),
+                   _tile_spec((1, b)), _tile_spec((b, b))),
+        out_shape=(jax.ShapeDtypeStruct((b, b), d),
+                   jax.ShapeDtypeStruct((b, b), d),
+                   jax.ShapeDtypeStruct((1, b), d),
+                   jax.ShapeDtypeStruct((b, b), d)),
+        interpret=interpret,
+    )(r, a)
+    return r1, v2, tau[0], t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_qt(rv, t, c, *, interpret: bool = True):
+    b = c.shape[-1]
+    return pl.pallas_call(
+        _apply_qt_kernel,
+        grid=(),
+        in_specs=[_tile_spec((b, b))] * 3,
+        out_specs=_tile_spec((b, b)),
+        out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+        interpret=interpret,
+    )(rv, t, c)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_tsqt(v2, t, c1, c2, *, interpret: bool = True):
+    b = c1.shape[-1]
+    return pl.pallas_call(
+        _apply_tsqt_kernel,
+        grid=(),
+        in_specs=[_tile_spec((b, b))] * 4,
+        out_specs=(_tile_spec((b, b)), _tile_spec((b, b))),
+        out_shape=(jax.ShapeDtypeStruct(c1.shape, c1.dtype),
+                   jax.ShapeDtypeStruct(c2.shape, c2.dtype)),
+        interpret=interpret,
+    )(v2, t, c1, c2)

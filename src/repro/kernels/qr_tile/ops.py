@@ -1,0 +1,41 @@
+"""Public ops for the tiled-QR kernels.
+
+``backend`` selects between the Pallas kernel (TPU target; ``interpret``
+mode executes the kernel body on CPU for validation) and the pure-jnp
+reference oracle.  On a CPU runtime the default is the Pallas kernel in
+interpret mode so the kernel path is always exercised.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import kernel, ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def geqrf(a, backend: str = "pallas"):
+    if backend == "ref":
+        return ref.geqrf_ref(a)
+    return kernel.geqrf(a, interpret=_interpret())
+
+
+def apply_qt(rv, t, c, backend: str = "pallas"):
+    if backend == "ref":
+        return ref.apply_qt_ref(rv, t, c)
+    return kernel.apply_qt(rv, t, c, interpret=_interpret())
+
+
+def tsqrf(r, a, backend: str = "pallas"):
+    if backend == "ref":
+        return ref.tsqrf_ref(r, a)
+    return kernel.tsqrf(r, a, interpret=_interpret())
+
+
+def apply_tsqt(v2, t, c1, c2, backend: str = "pallas"):
+    if backend == "ref":
+        return ref.apply_tsqt_ref(v2, t, c1, c2)
+    return kernel.apply_tsqt(v2, t, c1, c2, interpret=_interpret())

@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for the four tiled-QR kernels (Buttari et al. 2009,
+paper §4.1).  Deliberately written as straightforward column-by-column
+Householder loops — the Pallas kernels are validated against these.
+
+Conventions (LAPACK compact-WY):
+  * ``geqrf``:  A (b,b) -> RV (R in upper triangle incl. diag, Householder
+    vectors V in strict lower triangle, unit diagonal implicit), tau (b,),
+    T (b,b upper triangular) with  Q = I - V @ T @ V.T.
+  * ``apply_qt``: C <- Q^T C = C - V @ T.T @ (V.T @ C).
+  * ``tsqrf``: QR of the stacked (2b,b) [R; A] with R upper triangular.
+    Householder vectors are [e_j; v2_j]: the top block is the identity, so
+    only the dense bottom block V2 (b,b) is stored.  Returns (R', V2, tau,
+    T).
+  * ``apply_tsqt``: [C1; C2] <- Q^T [C1; C2]:
+        W  = T.T @ (C1 + V2.T @ C2)
+        C1 <- C1 - W ;  C2 <- C2 - V2 @ W.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _householder(alpha, sigma2):
+    """Scalar Householder quantities for pivot ``alpha`` and below-pivot
+    squared norm ``sigma2``.  Returns (beta, tau, inv_denom) with the
+    LAPACK convention H = I - tau * v v^T, v[pivot] = 1."""
+    zero = sigma2 == 0.0
+    sign = jnp.where(alpha >= 0.0, 1.0, -1.0)
+    beta = jnp.where(zero, alpha, -sign * jnp.sqrt(alpha * alpha + sigma2))
+    tau = jnp.where(zero, 0.0, (beta - alpha) / jnp.where(zero, 1.0, beta))
+    denom = alpha - beta
+    inv = jnp.where(zero, 0.0, 1.0 / jnp.where(denom == 0.0, 1.0, denom))
+    return beta, tau, inv
+
+
+def geqrf_ref(a: jnp.ndarray):
+    """Householder QR of one (b,b) tile."""
+    b = a.shape[0]
+    assert a.shape == (b, b)
+    taus = []
+    for j in range(b):
+        x = a[:, j]
+        alpha = x[j]
+        below = jnp.arange(b) > j
+        sigma2 = jnp.sum(jnp.where(below, x, 0.0) ** 2)
+        beta, tau, inv = _householder(alpha, sigma2)
+        v = jnp.where(below, x * inv, 0.0).at[j].set(1.0)
+        w = tau * (v @ a)          # (b,)
+        # only trailing columns are updated; earlier columns hold stored V
+        w = jnp.where(jnp.arange(b) > j, w, 0.0)
+        a = a - jnp.outer(v, w)
+        # store R entry and V below the diagonal (LAPACK layout)
+        a = a.at[j, j].set(beta)
+        a = a.at[:, j].set(jnp.where(below, v, a[:, j]))
+        taus.append(tau)
+    tau = jnp.stack(taus)
+    rv = a
+    t = _build_t(jnp.tril(rv, -1) + jnp.eye(b, dtype=rv.dtype), tau)
+    return rv, tau, t
+
+
+def _build_t(v: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """Compact-WY T factor:  T[:j,j] = -tau_j * T[:j,:j] @ (V[:, :j]^T v_j),
+    T[j,j] = tau_j."""
+    b = v.shape[1]
+    t = jnp.zeros((b, b), dtype=v.dtype)
+    for j in range(b):
+        vj = v[:, j]
+        u = v.T @ vj                      # (b,)
+        u = jnp.where(jnp.arange(b) < j, u, 0.0)
+        col = -tau[j] * (t @ u)
+        col = col.at[j].set(tau[j])
+        t = t.at[:, j].set(col)
+    return t
+
+
+def apply_qt_ref(rv: jnp.ndarray, t: jnp.ndarray, c: jnp.ndarray):
+    """C <- Q^T C with Q = I - V T V^T from ``geqrf_ref``."""
+    b = rv.shape[0]
+    v = jnp.tril(rv, -1) + jnp.eye(b, dtype=rv.dtype)
+    return c - v @ (t.T @ (v.T @ c))
+
+
+def tsqrf_ref(r: jnp.ndarray, a: jnp.ndarray):
+    """QR of [R; A] (triangle-on-top-of-square).  Updates R in place,
+    returns (R', V2, tau, T)."""
+    b = r.shape[0]
+    assert a.shape == (b, b)
+    v2 = jnp.zeros((b, b), dtype=a.dtype)
+    taus = []
+    for j in range(b):
+        alpha = r[j, j]
+        x = a[:, j]
+        sigma2 = jnp.sum(x * x)
+        beta, tau, inv = _householder(alpha, sigma2)
+        v = x * inv                      # bottom block of the reflector
+        # w_m = R[j,m] + v^T A[:,m]  for every column m
+        w = r[j, :] + v @ a
+        r = r.at[j, :].add(-tau * w)
+        a = a - tau * jnp.outer(v, w)
+        r = r.at[j, j].set(beta)
+        a = a.at[:, j].set(jnp.zeros(b, dtype=a.dtype))
+        v2 = v2.at[:, j].set(v)
+        taus.append(tau)
+    tau = jnp.stack(taus)
+    t = _build_t(v2, tau)  # top identity blocks contribute nothing (e_i^T e_j = 0, i<j)
+    return r, v2, tau, t
+
+
+def apply_tsqt_ref(v2: jnp.ndarray, t: jnp.ndarray, c1: jnp.ndarray,
+                   c2: jnp.ndarray):
+    """[C1; C2] <- Q^T [C1; C2] for the TS reflectors of ``tsqrf_ref``."""
+    w = t.T @ (c1 + v2.T @ c2)
+    return c1 - w, c2 - v2 @ w

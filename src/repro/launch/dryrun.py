@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  lower + compile the full-size step with production shardings (inputs are
+  ShapeDtypeStructs — nothing is allocated), then record
+    * compiled.memory_analysis()  — per-device bytes (proves it fits),
+    * compiled.cost_analysis()    — per-device HLO flops / bytes,
+    * the collective schedule     — op counts + per-device operand bytes
+      parsed from compiled.as_text(),
+    * depth-extrapolation         — XLA's HloCostAnalysis counts a scanned
+      layer body ONCE, so each cell is additionally lowered at two reduced
+      depths and the per-layer delta is extrapolated to the full depth
+      (flops and collective bytes; verified against an unrolled small model
+      in tests/test_dryrun_small.py).
+
+Results are written incrementally as JSON (one file per cell) for
+benchmarks/roofline.py.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective op counts and operand bytes (per device, since the
+    compiled module is the post-SPMD per-device program)."""
+    stats = {c: {"count": 0, "operand_bytes": 0.0, "result_bytes": 0.0}
+             for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for c in _COLLECTIVES:
+            if f" {c}(" in line or f"{c}-start(" in line:
+                matches = list(_SHAPE_RE.finditer(line))
+                if not matches:
+                    continue
+                paren = line.find("(", line.find(c))
+                result = [m for m in matches if m.start() < paren]
+                operands = [m for m in matches if m.start() >= paren]
+                stats[c]["count"] += 1
+                stats[c]["operand_bytes"] += sum(
+                    _shape_bytes(m) for m in operands)
+                stats[c]["result_bytes"] += sum(
+                    _shape_bytes(m) for m in result)
+                break
+    return stats
+
+
+def total_collective_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["operand_bytes"] for v in stats.values())
+
+
+# -----------------------------------------------------------------------------
+
+def input_specs(cfg, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    from repro.data import batch_specs
+    p = SHAPES[shape_name]
+    mode = {"train": "train", "prefill": "prefill", "decode": "decode"}[p["kind"]]
+    return batch_specs(cfg, p["seq_len"], p["global_batch"], mode=mode)
+
+
+def depth_variants(cfg) -> Tuple:
+    """Two reduced-depth configs preserving family structure, plus the
+    per-unit layer count for extrapolation: returns
+    (cfg1, cfg2, units1, units2, units_full).  Probes are UNROLLED
+    (scan_layers=False) so HloCostAnalysis sees every layer."""
+    cfg = dataclasses.replace(cfg, scan_layers=False)
+    fam = cfg.family
+    if fam == "moe":
+        fd = cfg.first_dense_layers
+        c1 = dataclasses.replace(cfg, n_layers=fd + 1)
+        c2 = dataclasses.replace(cfg, n_layers=fd + 2)
+        return c1, c2, 1, 2, cfg.n_layers - fd
+    if fam == "hybrid":
+        e = cfg.shared_attn_every
+        c1 = dataclasses.replace(cfg, n_layers=e)
+        c2 = dataclasses.replace(cfg, n_layers=2 * e)
+        return c1, c2, 1, 2, cfg.n_layers / e
+    if fam == "encdec":
+        c1 = dataclasses.replace(cfg, n_layers=1, enc_layers=1)
+        c2 = dataclasses.replace(cfg, n_layers=2, enc_layers=2)
+        return c1, c2, 1, 2, cfg.n_layers  # enc and dec scale together
+    c1 = dataclasses.replace(cfg, n_layers=1)
+    c2 = dataclasses.replace(cfg, n_layers=2)
+    return c1, c2, 1, 2, cfg.n_layers
+
+
+def skip_reason(cfg, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention arch: 500k decode needs sub-quadratic "
+                "attention (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def build_cell(cfg, shape_name: str, mesh, multi_pod: bool):
+    """Returns (jitted_fn, example_args (SDS), in_shardings description)."""
+    import functools
+
+    from repro.data import batch_specs
+    from repro.dist.sharding import (batch_pspecs, cache_pspecs, opt_pspecs,
+                                     param_pspecs, shardings_for)
+    from repro.models import lm, serving
+    from repro.optim import default_optimizer_for, make_optimizer
+    from repro.trainer.steps import (make_prefill_step, make_serve_step,
+                                     make_train_step)
+
+    p = SHAPES[shape_name]
+    kind = p["kind"]
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(functools.partial(lm.init_params, key, cfg))
+    pspecs = param_pspecs(param_shapes, mesh, multi_pod)
+    pshard = shardings_for(pspecs, mesh)
+
+    if kind == "train":
+        opt_name = default_optimizer_for(cfg)
+        train_step, opt_init = make_train_step(cfg, optimizer=opt_name)
+        opt_shapes = jax.eval_shape(opt_init, param_shapes)
+        ospecs = opt_pspecs(pspecs, opt_shapes, mesh)
+        oshard = shardings_for(ospecs, mesh)
+        bspecs = batch_specs(cfg, p["seq_len"], p["global_batch"], "train")
+        bpspecs = batch_pspecs(bspecs, mesh, multi_pod)
+        bshard = shardings_for(bpspecs, mesh)
+        fn = jax.jit(train_step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        return fn, (param_shapes, opt_shapes, bspecs), {"optimizer": opt_name}
+
+    if kind == "prefill":
+        prefill_step = make_prefill_step(cfg)
+        bspecs = batch_specs(cfg, p["seq_len"], p["global_batch"], "prefill")
+        bpspecs = batch_pspecs(bspecs, mesh, multi_pod)
+        bshard = shardings_for(bpspecs, mesh)
+        fn = jax.jit(prefill_step, in_shardings=(pshard, bshard))
+        return fn, (param_shapes, bspecs), {}
+
+    # decode
+    serve_step = make_serve_step(cfg)
+    cache_shapes = jax.eval_shape(functools.partial(
+        serving.init_cache, cfg, p["global_batch"], p["seq_len"]))
+    cspecs = cache_pspecs(cache_shapes, cfg, mesh, multi_pod)
+    cshard = shardings_for(cspecs, mesh)
+    tok = jax.ShapeDtypeStruct((p["global_batch"], 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((p["global_batch"],), jnp.int32)
+    iospecs = batch_pspecs({"tokens": tok, "pos": pos}, mesh, multi_pod)
+    ioshard = shardings_for(iospecs, mesh)
+    fn = jax.jit(serve_step,
+                 in_shardings=(pshard, cshard, ioshard["tokens"],
+                               ioshard["pos"]),
+                 out_shardings=(None, cshard),
+                 donate_argnums=(1,))
+    return fn, (param_shapes, cache_shapes, tok, pos), {}
+
+
+def analyse_compiled(compiled) -> Dict[str, Any]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    colls = collective_stats(txt)
+    return {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes": int(ma.peak_memory_in_bytes),
+        },
+        "collectives": colls,
+        "collective_operand_bytes_per_device": total_collective_bytes(colls),
+        "hlo_bytes": len(txt),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str, extrapolate: bool = True,
+             act_shard: bool = False) -> Dict[str, Any]:
+    import contextlib
+
+    from repro.configs import get_config
+    from repro.dist.act_sharding import activation_sharding
+    from repro.launch.mesh import make_production_mesh
+
+    multi_pod = mesh_kind == "multi"
+    cfg = get_config(arch)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": 512 if multi_pod else 256,
+        "seq_len": SHAPES[shape_name]["seq_len"],
+        "global_batch": SHAPES[shape_name]["global_batch"],
+        "kind": SHAPES[shape_name]["kind"],
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = reason
+        return _save(rec, out_dir)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = ("pod", "data") if multi_pod else "data"
+
+    def ctx_factory():
+        return (activation_sharding(dp, "model") if act_shard
+                else contextlib.nullcontext())
+
+    rec["act_shard"] = act_shard
+    try:
+        t0 = time.time()
+        fn, args, meta = build_cell(cfg, shape_name, mesh, multi_pod)
+        with mesh, ctx_factory():
+            lowered = fn.lower(*args)
+            rec["lower_seconds"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_seconds"] = round(time.time() - t1, 1)
+        rec.update(meta)
+        rec["full"] = analyse_compiled(compiled)
+        print(f"  memory_analysis: {compiled.memory_analysis()}")
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+
+        if extrapolate:
+            with ctx_factory():
+                rec["extrapolated"] = _depth_extrapolate(
+                    cfg, shape_name, mesh, multi_pod)
+        rec["status"] = "ok"
+    except Exception as e:  # record the failure — these are bugs to fix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return _save(rec, out_dir)
+
+
+def _depth_extrapolate(cfg, shape_name, mesh, multi_pod) -> Dict[str, Any]:
+    """Per-layer delta from two reduced-depth compiles, extrapolated to the
+    full depth (corrects scan-body-counted-once in HloCostAnalysis)."""
+    c1, c2, u1, u2, u_full = depth_variants(cfg)
+    out = {}
+    for label, c in (("d1", c1), ("d2", c2)):
+        fn, args, _ = build_cell(c, shape_name, mesh, multi_pod)
+        with mesh:
+            compiled = fn.lower(*args).compile()
+        a = analyse_compiled(compiled)
+        out[label] = {
+            "flops": a["flops_per_device"],
+            "coll_bytes": a["collective_operand_bytes_per_device"],
+            "bytes_accessed": a["bytes_accessed_per_device"],
+        }
+    du = u2 - u1
+    scale = (u_full - u2) / du
+    flops = out["d2"]["flops"] + (out["d2"]["flops"] - out["d1"]["flops"]) * scale
+    coll = out["d2"]["coll_bytes"] + (
+        out["d2"]["coll_bytes"] - out["d1"]["coll_bytes"]) * scale
+    bytes_acc = out["d2"]["bytes_accessed"] + (
+        out["d2"]["bytes_accessed"] - out["d1"]["bytes_accessed"]) * scale
+    return {
+        "probe": out, "units_full": u_full,
+        "flops_per_device": flops,
+        "collective_operand_bytes_per_device": coll,
+        "bytes_accessed_per_device": bytes_acc,
+    }
+
+
+def _save(rec: Dict[str, Any], out_dir: str) -> Dict[str, Any]:
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(
+        out_dir, f"{rec['mesh']}_{rec['arch']}_{rec['shape']}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        extra = (f" flops/dev={rec['full']['flops_per_device']:.3e}"
+                 f" peak={rec['full']['memory']['peak_bytes']/2**30:.2f}GiB"
+                 f" coll={rec['full']['collective_operand_bytes_per_device']/2**20:.1f}MiB"
+                 f" ({rec.get('lower_seconds', 0)}s lower,"
+                 f" {rec.get('compile_seconds', 0)}s compile)")
+    elif status == "error":
+        extra = " " + rec["error"][:160]
+    print(f"[{status}] {rec['mesh']}/{rec['arch']}/{rec['shape']}{extra}",
+          flush=True)
+    return rec
+
+
+def main() -> None:
+    from repro.configs import ARCH_IDS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--act-shard", action="store_true",
+                    help="explicit activation sharding constraints "
+                         "(EXPERIMENTS.md §Perf)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    n_ok = n_err = n_skip = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                fn = os.path.join(args.out, f"{mesh_kind}_{arch}_{shape}.json")
+                if args.skip_existing and os.path.exists(fn):
+                    with open(fn) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[cached] {mesh_kind}/{arch}/{shape}")
+                            continue
+                rec = run_cell(arch, shape, mesh_kind, args.out,
+                               extrapolate=not args.no_extrapolate,
+                               act_shard=args.act_shard)
+                n_ok += rec["status"] == "ok"
+                n_err += rec["status"] == "error"
+                n_skip += rec["status"] == "skipped"
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

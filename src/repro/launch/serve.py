@@ -1,0 +1,82 @@
+"""Batched serving driver: prefill a batch of prompts, then decode with a
+donated KV/state cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
+        --reduced --batch 4 --prompt-len 16 --new-tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import lm, serving
+    from repro.trainer.steps import make_serve_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    max_seq = args.prompt_len + args.new_tokens
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(key, cfg)
+    tokens = jax.random.randint(jax.random.fold_in(key, 1),
+                                (args.batch, args.prompt_len), 0, cfg.vocab)
+    extra = {}
+    if cfg.family == "vlm":
+        extra["vis_embeds"] = jnp.zeros(
+            (args.batch, cfg.n_vis_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        extra["frames"] = jnp.zeros((args.batch, cfg.enc_seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+
+    t0 = time.time()
+    logits, cache, pos = serving.prefill(params, cfg, tokens, extra=extra)
+    # pad the prompt-length cache out to max_seq (attention caches only)
+    plen = args.prompt_len + (cfg.n_vis_tokens if cfg.family == "vlm" else 0)
+
+    def pad(a):
+        if a.ndim >= 4 and a.shape[2] == plen:
+            padding = [(0, 0)] * a.ndim
+            padding[2] = (0, max_seq - args.prompt_len)
+            return jnp.pad(a, padding)
+        return a
+
+    cache = jax.tree.map(pad, cache)
+    print(f"prefill {args.batch}×{args.prompt_len}: {time.time() - t0:.2f}s")
+
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    tok = jnp.argmax(logits, -1)[:, None]
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.new_tokens):
+        logits, cache = serve_step(params, cache, tok, pos)
+        tok = jnp.argmax(logits, -1)[:, None]
+        pos = pos + 1
+        out.append(tok)
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+    print(f"decode {args.new_tokens} tokens × batch {args.batch}: "
+          f"{dt:.2f}s ({args.new_tokens * args.batch / dt:.1f} tok/s)")
+    ids = jnp.concatenate(out, axis=1)
+    print("greedy continuations (token ids):")
+    for row in ids[:4]:
+        print("  ", list(map(int, row[:16])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Training driver CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+        --steps 200 --workdir /tmp/run1
+
+``--resume`` continues from the latest checkpoint in workdir (the loop also
+auto-resumes if one exists).  ``--fail-at`` injects a failure (fault-
+tolerance drill).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="auto",
+                    choices=["auto", "adamw", "adafactor"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU-runnable)")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.trainer.loop import run_training
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    _, _, history = run_training(
+        cfg, args.workdir, args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch, lr=args.lr,
+        optimizer=args.optimizer, ckpt_every=args.ckpt_every,
+        fail_at_step=args.fail_at, seed=args.seed)
+    first = history[0][1] if history else float("nan")
+    last = history[-1][1] if history else float("nan")
+    print(f"done: {len(history)} steps, loss {first:.4f} -> {last:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""LM model zoo: the assigned architectures as pure-JAX functional modules."""

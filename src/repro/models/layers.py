@@ -1,0 +1,248 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (full / chunked /
+decode-with-cache), SwiGLU MLP.  Pure functions over explicit param pytrees;
+init functions mirror each apply function.
+
+Attention defaults to *chunked online-softmax* (lax.scan over KV blocks —
+the same math as the flash_attention Pallas kernel) once the sequence
+exceeds ``attn_chunk``, so 32 k-token prefills never materialise S² scores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+# --- RMSNorm ------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * p["scale"]).astype(x.dtype)
+
+
+# --- rotary embeddings ----------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, hd), positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([
+        x1 * cos - x2 * sin,
+        x2 * cos + x1 * sin,
+    ], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int, offset: int = 0) -> jnp.ndarray:
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (jnp.log(10000.0) / d))[None, :]
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# --- GQA attention ------------------------------------------------------------
+
+def attention_init(key, cfg, d_in: Optional[int] = None) -> Params:
+    d = d_in or cfg.d_model
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _qkv(p: Params, cfg, x: jnp.ndarray, positions, d_in=None):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B,S,Hkv,hd) → (B,S,H,hd) by repeating each kv head."""
+    hkv = k.shape[2]
+    if hkv == n_heads:
+        return k
+    rep = n_heads // hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def sdpa_full(q, k, v, causal: bool = True,
+              q_offset: int = 0) -> jnp.ndarray:
+    """q: (B,Sq,H,hd); k,v: (B,Sk,H,hd).  fp32 softmax."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qi = jnp.arange(sq)[:, None] + q_offset
+        kj = jnp.arange(sk)[None, :]
+        scores = jnp.where(qi >= kj, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def sdpa_chunked(q, k, v, chunk: int, causal: bool = True) -> jnp.ndarray:
+    """Online-softmax over KV chunks (flash-attention math, pure jnp).
+    Requires Sk % chunk == 0.  Same-length causal self-attention."""
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    b, sq, h, hd = q.shape
+    vd = v.shape[-1]
+    sk = k.shape[1]
+    assert sk % chunk == 0, (sk, chunk)
+    nk = sk // chunk
+    scale = hd ** -0.5
+    kc = k.reshape(b, nk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, chunk, h, vd).transpose(1, 0, 2, 3, 4)
+    qi = jnp.arange(sq)[:, None]
+
+    def body(carry, inp):
+        m, l, acc = carry            # (B,H,Sq), (B,H,Sq), (B,Sq,H,hd) fp32
+        kb, vb, kidx = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = constrain(s, "dp", "tp", None, None)
+        if causal:
+            kj = kidx * chunk + jnp.arange(chunk)[None, :]
+            s = jnp.where(qi >= kj, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) → nan
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] \
+            + jnp.einsum("bhqk,bkhd->bqhd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = constrain(jnp.full((b, h, sq), -jnp.inf, jnp.float32),
+                   "dp", "tp", None)
+    l0 = constrain(jnp.zeros((b, h, sq), jnp.float32), "dp", "tp", None)
+    acc0 = constrain(jnp.zeros((b, sq, h, vd), jnp.float32),
+                     "dp", None, "tp", None)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(nk)))
+    l = jnp.maximum(l, 1e-30)
+    return (acc / l.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+
+
+def attention(p: Params, cfg, x: jnp.ndarray, positions,
+              return_kv: bool = False):
+    """Causal self-attention over (B,S,d).  ``return_kv`` also returns the
+    pre-repeat (B,S,Hkv,hd) keys/values for prefill cache construction."""
+    b, s, d = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    kf = _repeat_kv(k, cfg.n_heads)
+    vf = _repeat_kv(v, cfg.n_heads)
+    if cfg.attn_chunk and s > cfg.attn_chunk and s % cfg.attn_chunk == 0:
+        o = sdpa_chunked(q, kf, vf, cfg.attn_chunk)
+    else:
+        o = sdpa_full(q, kf, vf)
+    out = o.reshape(b, s, -1) @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(p: Params, cfg, x: jnp.ndarray, cache: Tuple,
+                     pos: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple]:
+    """One-token decode: x (B,1,d), cache = (k,v) each (B,Smax,Hkv,hd),
+    pos (B,) current index.  Returns (out (B,1,d), new cache)."""
+    b = x.shape[0]
+    ck, cv = cache
+    q, k, v = _qkv(p, cfg, x, pos[:, None])
+    ck = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(
+        c, upd, (i, 0, 0)))(ck, k, pos)
+    cv = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(
+        c, upd, (i, 0, 0)))(cv, v, pos)
+    kf = _repeat_kv(ck, cfg.n_heads)
+    vf = _repeat_kv(cv, cfg.n_heads)
+    hd = cfg.hd
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf,
+                        preferred_element_type=jnp.float32) * scale
+    mask = (jnp.arange(ck.shape[1])[None, :] <= pos[:, None])
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+    return o.reshape(b, 1, -1) @ p["wo"], (ck, cv)
+
+
+def cross_attention(p: Params, cfg, x: jnp.ndarray,
+                    kv_src: jnp.ndarray) -> jnp.ndarray:
+    """Encoder-decoder cross attention (no RoPE, no mask)."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (kv_src @ p["wk"]).reshape(b, kv_src.shape[1], cfg.n_kv_heads, hd)
+    v = (kv_src @ p["wv"]).reshape(b, kv_src.shape[1], cfg.n_kv_heads, hd)
+    k = _repeat_kv(k, cfg.n_heads)
+    v = _repeat_kv(v, cfg.n_heads)
+    o = sdpa_full(q, k, v, causal=False)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+# --- SwiGLU MLP ------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, d_ff, dtype),
+        "w_up": dense_init(ks[1], d, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d, dtype),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

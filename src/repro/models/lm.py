@@ -1,0 +1,385 @@
+"""LM assembly: init / forward / loss / prefill / decode for every assigned
+architecture family.
+
+Layer stacks are parameter-stacked (leading L axis) and consumed with
+``lax.scan`` so the HLO holds one traced layer body regardless of depth —
+essential for tractable 512-device dry-run compiles.  Per-layer remat
+(``jax.checkpoint``) bounds activation memory.
+
+Families:
+  dense   — pre-norm GQA + SwiGLU (phi4 / starcoder2 / granite / qwen3)
+  moe     — GQA or MLA attention + routed experts (kimi-k2 / deepseek-v3)
+  ssm     — Mamba1 trunk (falcon-mamba)
+  hybrid  — Mamba2 trunk + shared attention blocks every k layers (zamba2)
+  encdec  — Whisper backbone (stub frame embeddings for the encoder)
+  vlm     — InternVL backbone (stub patch embeddings prepended to text)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import mla as mla_mod
+from .scan_util import scan_layers as _scan_or_unroll
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (attention, attention_decode, attention_init,
+                     cross_attention, dense_init, mlp, mlp_init, rmsnorm,
+                     rmsnorm_init, sinusoidal_pos)
+from repro.dist.act_sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# =============================================================================
+# init
+# =============================================================================
+
+def _embed_init(key, cfg) -> Params:
+    ks = jax.random.split(key, 2)
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    p = {"tok": (jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32)
+                 * d ** -0.5).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], d, cfg.vocab, dt)
+    return p
+
+
+def _dense_layer_init(key, cfg) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": rmsnorm_init(cfg.d_model),
+        "attn": (mla_mod.mla_init(ks[0], cfg) if cfg.mla
+                 else attention_init(ks[0], cfg)),
+        "mlp_norm": rmsnorm_init(cfg.d_model),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype)),
+    }
+
+
+def _moe_layer_init(key, cfg) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": rmsnorm_init(cfg.d_model),
+        "attn": (mla_mod.mla_init(ks[0], cfg) if cfg.mla
+                 else attention_init(ks[0], cfg)),
+        "mlp_norm": rmsnorm_init(cfg.d_model),
+        "moe": moe_mod.moe_init(ks[1], cfg),
+    }
+
+
+def _ssm_layer_init(key, cfg) -> Params:
+    return {
+        "norm": rmsnorm_init(cfg.d_model),
+        "mamba": ssm_mod.mamba1_init(key, cfg),
+    }
+
+
+def _hybrid_layer_init(key, cfg) -> Params:
+    return {
+        "norm": rmsnorm_init(cfg.d_model),
+        "mamba": ssm_mod.mamba2_init(key, cfg),
+    }
+
+
+def _shared_cfg(cfg):
+    """Zamba2 shared block runs on the concat width 2·d."""
+    d2 = 2 * cfg.d_model
+    return dataclasses.replace(cfg, d_model=d2, head_dim=d2 // cfg.n_heads)
+
+
+def _shared_block_init(key, cfg) -> Params:
+    scfg = _shared_cfg(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "norm": rmsnorm_init(scfg.d_model),
+        "attn": attention_init(ks[0], scfg),
+        "mlp_norm": rmsnorm_init(scfg.d_model),
+        "mlp": mlp_init(ks[1], scfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype)),
+    }
+
+
+def _stack_init(layer_init, key, cfg, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: layer_init(k, cfg))(keys)
+
+
+def _encdec_layer_init(key, cfg, cross: bool) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "attn_norm": rmsnorm_init(cfg.d_model),
+        "attn": attention_init(ks[0], cfg),
+        "mlp_norm": rmsnorm_init(cfg.d_model),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype)),
+    }
+    if cross:
+        p["cross_norm"] = rmsnorm_init(cfg.d_model)
+        p["cross"] = attention_init(ks[2], cfg)
+    return p
+
+
+def init_params(key, cfg) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"embed": _embed_init(ks[0], cfg),
+                 "final_norm": rmsnorm_init(cfg.d_model)}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["layers"] = _stack_init(_dense_layer_init, ks[1], cfg, cfg.n_layers)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            p["dense_layers"] = _stack_init(_dense_layer_init, ks[1], cfg, nd)
+        p["moe_layers"] = _stack_init(_moe_layer_init, ks[2], cfg,
+                                      cfg.n_layers - nd)
+    elif fam == "ssm":
+        p["layers"] = _stack_init(_ssm_layer_init, ks[1], cfg, cfg.n_layers)
+    elif fam == "hybrid":
+        p["layers"] = _stack_init(_hybrid_layer_init, ks[1], cfg,
+                                  cfg.n_layers)
+        p["shared"] = _stack_init(_shared_block_init, ks[2], cfg,
+                                  cfg.n_shared_blocks)
+        n_sites = cfg.n_layers // cfg.shared_attn_every
+        d2 = 2 * cfg.d_model
+        p["site_proj"] = (jax.random.normal(
+            ks[3], (n_sites, d2, cfg.d_model), jnp.float32)
+            * d2 ** -0.5).astype(jnp.dtype(cfg.dtype))
+    elif fam == "encdec":
+        p["enc_layers"] = _stack_init(
+            functools.partial(_encdec_layer_init, cross=False),
+            ks[1], cfg, cfg.enc_layers)
+        p["dec_layers"] = _stack_init(
+            functools.partial(_encdec_layer_init, cross=True),
+            ks[2], cfg, cfg.n_layers)
+        p["enc_norm"] = rmsnorm_init(cfg.d_model)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# =============================================================================
+# forward
+# =============================================================================
+
+def _dense_block(p, cfg, x, positions):
+    if cfg.mla:
+        a = mla_mod.mla_attention(p["attn"], cfg,
+                                  rmsnorm(p["attn_norm"], x, cfg.norm_eps),
+                                  positions)
+    else:
+        a = attention(p["attn"], cfg,
+                      rmsnorm(p["attn_norm"], x, cfg.norm_eps), positions)
+    x = x + a
+    x = x + mlp(p["mlp"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    return x
+
+
+def _moe_block(p, cfg, x, positions):
+    if cfg.mla:
+        a = mla_mod.mla_attention(p["attn"], cfg,
+                                  rmsnorm(p["attn_norm"], x, cfg.norm_eps),
+                                  positions)
+    else:
+        a = attention(p["attn"], cfg,
+                      rmsnorm(p["attn_norm"], x, cfg.norm_eps), positions)
+    x = x + a
+    y, aux = moe_mod.moe_apply(p["moe"], cfg,
+                               rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    return x + y, aux
+
+
+def _scan_layers(block_fn, stack, x, *args, remat=True, cfg=None):
+    fn = block_fn
+    if remat:
+        fn = jax.checkpoint(block_fn)
+
+    def body(h, layer_p):
+        # sequence-parallel residual: S over 'model' between layers
+        # (§Perf iteration 3) — norms are per-token so SP is transparent
+        h = constrain(h, "dp", "tp", None)
+        return fn(layer_p, h, *args), None
+
+    x, _ = _scan_or_unroll(cfg, body, x, stack)
+    return x
+
+
+def _scan_layers_aux(block_fn, stack, x, *args, remat=True, cfg=None):
+    fn = block_fn
+    if remat:
+        fn = jax.checkpoint(block_fn)
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h = constrain(h, "dp", None, None)
+        h, a = fn(layer_p, h, *args)
+        return (h, aux + a), None
+
+    (x, aux), _ = _scan_or_unroll(
+        cfg, body, (x, jnp.zeros((), jnp.float32)), stack)
+    return x, aux
+
+
+def _hybrid_trunk(params, cfg, x, positions, remat=True):
+    """Mamba2 trunk with shared attention every k layers (zamba2)."""
+    every = cfg.shared_attn_every
+    n_sites = cfg.n_layers // every
+    n_body = n_sites * every
+    emb0 = x
+    scfg = _shared_cfg(cfg)
+
+    def mamba_block(layer_p, h):
+        return h + ssm_mod.mamba2_apply(
+            layer_p["mamba"], cfg, rmsnorm(layer_p["norm"], h, cfg.norm_eps))
+
+    mb = jax.checkpoint(mamba_block) if remat else mamba_block
+
+    def shared_apply(shared_p, site_proj, h):
+        cat = jnp.concatenate([h, emb0], axis=-1)       # (B,S,2d)
+        u = cat + attention(shared_p["attn"], scfg,
+                            rmsnorm(shared_p["norm"], cat, cfg.norm_eps),
+                            positions)
+        u = u + mlp(shared_p["mlp"],
+                    rmsnorm(shared_p["mlp_norm"], u, cfg.norm_eps))
+        return h + u @ site_proj                        # project 2d → d
+
+    sa = jax.checkpoint(shared_apply) if remat else shared_apply
+
+    # reshape the first n_sites*every layers into (n_sites, every, ...)
+    seg_stack = jax.tree.map(
+        lambda a: a[:n_body].reshape((n_sites, every) + a.shape[1:]),
+        params["layers"])
+    tail_stack = jax.tree.map(lambda a: a[n_body:], params["layers"])
+
+    def segment(h, seg):
+        seg_layers, site_proj, site_idx = seg
+
+        def inner(hh, lp):
+            return mb(lp, hh), None
+
+        h, _ = _scan_or_unroll(cfg, inner, h, seg_layers)
+        block_idx = site_idx % cfg.n_shared_blocks
+        shared_p = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, block_idx, 0,
+                                                   keepdims=False),
+            params["shared"])
+        h = sa(shared_p, site_proj, h)
+        return h, None
+
+    x, _ = _scan_or_unroll(cfg, segment, x,
+                           (seg_stack, params["site_proj"],
+                            jnp.arange(n_sites)))
+
+    def tail(h, lp):
+        return mb(lp, h), None
+
+    x, _ = _scan_or_unroll(cfg, tail, x, tail_stack)
+    return x
+
+
+def forward(params: Params, cfg, tokens: jnp.ndarray,
+            extra: Optional[Dict[str, jnp.ndarray]] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B,S) → (hidden (B,S',d), aux loss).  For vlm, S' = V + S;
+    for encdec, tokens are decoder tokens and extra['frames'] feeds the
+    encoder."""
+    extra = extra or {}
+    b, s = tokens.shape
+    x = constrain(params["embed"]["tok"][tokens], "dp", None, None)
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+    if fam == "vlm":
+        vis = extra["vis_embeds"].astype(x.dtype)       # (B,V,d) stub
+        x = jnp.concatenate([vis, x], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    if fam in ("dense", "vlm"):
+        x = _scan_layers(
+            lambda p_, h_, pos_: _dense_block(p_, cfg, h_, pos_),
+            params["layers"], x, positions, remat=cfg.remat, cfg=cfg)
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            x = _scan_layers(
+                lambda p_, h_, pos_: _dense_block(p_, cfg, h_, pos_),
+                params["dense_layers"], x, positions, remat=cfg.remat,
+                cfg=cfg)
+        x, aux = _scan_layers_aux(
+            lambda p_, h_, pos_: _moe_block(p_, cfg, h_, pos_),
+            params["moe_layers"], x, positions, remat=cfg.remat, cfg=cfg)
+    elif fam == "ssm":
+        x = _scan_layers(
+            lambda p_, h_: h_ + ssm_mod.mamba1_apply(
+                p_["mamba"], cfg, rmsnorm(p_["norm"], h_, cfg.norm_eps)),
+            params["layers"], x, remat=cfg.remat, cfg=cfg)
+    elif fam == "hybrid":
+        x = _hybrid_trunk(params, cfg, x, positions, remat=cfg.remat)
+    elif fam == "encdec":
+        frames = extra["frames"].astype(x.dtype)        # (B,F,d) stub
+        e = frames + sinusoidal_pos(frames.shape[1],
+                                    cfg.d_model).astype(x.dtype)
+
+        def enc_block(p_, h_):
+            h_ = h_ + attention(
+                p_["attn"], dataclasses.replace(cfg, attn_chunk=0),
+                rmsnorm(p_["attn_norm"], h_, cfg.norm_eps),
+                jnp.broadcast_to(jnp.arange(h_.shape[1]), h_.shape[:2]))
+            return h_ + mlp(p_["mlp"], rmsnorm(p_["mlp_norm"], h_,
+                                               cfg.norm_eps))
+
+        e = _scan_layers(enc_block, params["enc_layers"], e,
+                         remat=cfg.remat, cfg=cfg)
+        e = rmsnorm(params["enc_norm"], e, cfg.norm_eps)
+        x = x + sinusoidal_pos(s, cfg.d_model).astype(x.dtype)
+
+        def dec_block(p_, h_, pos_):
+            h_ = h_ + attention(p_["attn"], cfg,
+                                rmsnorm(p_["attn_norm"], h_, cfg.norm_eps),
+                                pos_)
+            h_ = h_ + cross_attention(p_["cross"], cfg,
+                                      rmsnorm(p_["cross_norm"], h_,
+                                              cfg.norm_eps), e)
+            return h_ + mlp(p_["mlp"], rmsnorm(p_["mlp_norm"], h_,
+                                               cfg.norm_eps))
+
+        x = _scan_layers(dec_block, params["dec_layers"], x, positions,
+                         remat=cfg.remat, cfg=cfg)
+    else:
+        raise ValueError(fam)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def logits_fn(params: Params, cfg, hidden: jnp.ndarray) -> jnp.ndarray:
+    head = (params["embed"]["tok"].T if cfg.tie_embeddings
+            else params["embed"]["head"])
+    return hidden @ head
+
+
+def loss_fn(params: Params, cfg, batch: Dict[str, jnp.ndarray],
+            aux_coef: float = 0.01) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token cross entropy (+ MoE aux).  batch: tokens (B,S),
+    loss_mask (B,S) optional, plus modality extras."""
+    tokens = batch["tokens"]
+    hidden, aux = forward(params, cfg, tokens, extra=batch)
+    if cfg.family == "vlm":                      # drop visual positions
+        hidden = hidden[:, cfg.n_vis_tokens:]
+    logits = constrain(logits_fn(params, cfg, hidden),
+                       "dp", None, "tp").astype(jnp.float32)
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = batch.get("loss_mask",
+                     jnp.ones_like(tokens, jnp.float32))
+    mask = mask * jnp.concatenate(
+        [jnp.ones_like(tokens[:, :-1], jnp.float32),
+         jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll) / denom
+    z_loss = 1e-4 * jnp.sum((lse * mask) ** 2) / denom
+    loss = ce + aux_coef * aux + z_loss
+    return loss, {"ce": ce, "aux": aux, "z": z_loss,
+                  "ntok": jnp.sum(mask)}

@@ -1,0 +1,127 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Q and KV pass through low-rank bottlenecks; the decode cache stores only the
+compressed latent (kv_lora_rank) plus the shared RoPE key — the MLA memory
+win.  The decode path uses the *weight-absorbed* form: scores are computed
+directly against the compressed cache (q absorbed through W_uk), and the
+context is re-expanded through W_uv after the softmax.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, rmsnorm_init, rope, sdpa_chunked, sdpa_full
+
+Params = Dict[str, Any]
+
+
+def mla_init(key, cfg) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk_hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq_a": dense_init(ks[0], d, cfg.q_lora_rank, dt),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, h * qk_hd, dt),
+        "wkv_a": dense_init(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, dt),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank),
+        "wkv_b": dense_init(ks[3], cfg.kv_lora_rank,
+                            h * (cfg.qk_nope_dim + cfg.v_head_dim), dt),
+        "wo": dense_init(ks[4], h * cfg.v_head_dim, d, dt),
+    }
+
+
+def _mla_q(p: Params, cfg, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    cq = rmsnorm(p["q_norm"], x @ p["wq_a"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(b, s, h, qk_hd)
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(p: Params, cfg, x, positions):
+    kv_a = x @ p["wkv_a"]
+    c_kv = rmsnorm(p["kv_norm"], kv_a[..., :cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = rope(kv_a[..., cfg.kv_lora_rank:][:, :, None, :], positions,
+                  cfg.rope_theta)[:, :, 0]          # (B,S,rope) shared head
+    return c_kv, k_rope
+
+
+def mla_attention(p: Params, cfg, x: jnp.ndarray, positions,
+                  return_latent: bool = False):
+    """Full-sequence causal MLA (training / prefill math)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_kv_latent(p, cfg, x, positions)
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h,
+                                     cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope = kv[..., :cfg.qk_nope_dim]
+    v = kv[..., cfg.qk_nope_dim:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, cfg.qk_rope_dim))], axis=-1)
+    if cfg.attn_chunk and s > cfg.attn_chunk and s % cfg.attn_chunk == 0:
+        o = sdpa_chunked(q, k, v, cfg.attn_chunk)
+    else:
+        o = sdpa_full(q, k, v)
+    out = o.reshape(b, s, -1) @ p["wo"]
+    if return_latent:
+        return out, (c_kv, k_rope)
+    return out
+
+
+def mla_init_cache(cfg, batch: int, max_seq: int):
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank),
+                          jnp.dtype(cfg.dtype)),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim),
+                            jnp.dtype(cfg.dtype)),
+    }
+
+
+def mla_prefill_cache(p: Params, cfg, x, positions):
+    """Latents for the whole prompt (stored compressed)."""
+    return _mla_kv_latent(p, cfg, x, positions)
+
+
+def mla_decode(p: Params, cfg, x: jnp.ndarray, cache: Params,
+               pos: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """Weight-absorbed single-token decode.  x (B,1,d), pos (B,)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    nope, vd, rd = cfg.qk_nope_dim, cfg.v_head_dim, cfg.qk_rope_dim
+    lat = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, cfg, x, pos[:, None])   # (B,1,H,·)
+    c_new, r_new = _mla_kv_latent(p, cfg, x, pos[:, None])
+    c_kv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0)))(cache["c_kv"], c_new, pos)
+    k_rope = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0)))(cache["k_rope"], r_new, pos)
+
+    w_uk = p["wkv_b"].reshape(lat, h, nope + vd)[..., :nope]   # (lat,H,nope)
+    w_uv = p["wkv_b"].reshape(lat, h, nope + vd)[..., nope:]   # (lat,H,vd)
+    # absorb: q_eff (B,1,H,lat)
+    q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)
+    scores = (jnp.einsum("bqhl,bsl->bhqs", q_eff, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope,
+                           preferred_element_type=jnp.float32))
+    scores = scores * (nope + rd) ** -0.5
+    mask = jnp.arange(c_kv.shape[1])[None, :] <= pos[:, None]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", w, c_kv)        # (B,1,H,lat)
+    o = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)        # (B,1,H,vd)
+    out = o.reshape(b, 1, -1) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded sort-based
+dispatch (GSPMD/EP-friendly: the (E, C, d) buffers shard the expert dim over
+the 'model' mesh axis, turning dispatch/combine into all-to-alls) plus
+always-on shared experts (DeepSeek-V3 / Kimi-K2 style).
+
+Compute scales with E·C ≈ T·topk·capacity_factor — i.e. with *active*
+experts only, matching the 6·N_active·D flop model used by the roofline.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+from .layers import dense_init, mlp, mlp_init
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, cfg) -> Params:
+    d, dff, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    scale = (1.0 / d) ** 0.5
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, dff), jnp.float32)
+                   * scale).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e, d, dff), jnp.float32)
+                 * scale).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, dff, d), jnp.float32)
+                   * (1.0 / dff) ** 0.5).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d,
+                               cfg.moe_d_ff * cfg.n_shared_experts, dt)
+    return p
+
+
+def _capacity(t: int, k: int, e: int, factor: float) -> int:
+    c = int(t * k * factor / e) + 1
+    c = max(4, min(c, t))
+    if c > 256:
+        c = -(-c // 256) * 256   # round up: TPU-tile friendly + shardable
+    return c
+
+
+def moe_apply(p: Params, cfg, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d) → (out (B,S,d), aux load-balance loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.experts_per_tok, cfg.n_experts
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                   # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)      # renormalise
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # --- sort-based capacity dispatch -----------------------------------
+    c = _capacity(t, k, e, cfg.capacity_factor)
+    flat_e = idx.reshape(-1)                                   # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)                   # group by expert
+    sorted_e = flat_e[order]
+    # rank within expert group
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = jnp.arange(t * k) - starts[sorted_e]
+    keep = rank < c
+    tok = order // k                                           # source token
+    buf = jnp.zeros((e, c, d), x.dtype)
+    buf = buf.at[sorted_e, jnp.where(keep, rank, 0)].add(
+        jnp.where(keep[:, None], xt[tok], 0).astype(x.dtype))
+    # NOTE (§Perf iterations 1–2): constraining the dispatch buffers made
+    # collectives WORSE (E-only: 8x; E×C 2-D: still ~10x baseline) — the
+    # scatter/gather pair re-partitions through whatever sharding we pin.
+    # GSPMD's own choice for the dispatch path is better; leave it alone.
+
+    # --- expert compute (E,C,d) @ (E,d,f) --------------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])             # (E,C,d)
+
+    # --- combine ------------------------------------------------------------
+    gath = y[sorted_e, jnp.where(keep, rank, 0)]               # (T*k, d)
+    gath = jnp.where(keep[:, None], gath, 0)
+    gsort = gate_vals.reshape(-1)[order]
+    out = jnp.zeros((t, d), jnp.float32).at[tok].add(
+        gath.astype(jnp.float32) * gsort[:, None])
+    out = out.astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], xt)
+    return out.reshape(b, s, d), aux
+
+
+def moe_apply_dense_ref(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: run every expert on every token, mask by top-k gates — the
+    capacity-free semantics the dispatch must match (up to dropped tokens,
+    so tests use capacity_factor high enough to drop nothing)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, cfg.experts_per_tok)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    gates = jnp.zeros((t, cfg.n_experts), jnp.float32)
+    gates = jax.vmap(lambda g, i, v: g.at[i].set(v))(gates, idx, gate_vals)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["w_gate"])) \
+        * jnp.einsum("td,edf->tef", xt, p["w_up"])
+    y = jnp.einsum("tef,efd->ted", h, p["w_down"])
+    out = jnp.einsum("ted,te->td", y.astype(jnp.float32), gates)
+    out = out.astype(x.dtype)
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], xt)
+    return out.reshape(b, s, d)

@@ -1,0 +1,31 @@
+"""lax.scan over layer stacks, or a Python unroll when
+``cfg.scan_layers=False``.
+
+The unrolled form exists for the dry-run's depth probes: XLA's
+HloCostAnalysis counts a while-loop body once regardless of trip count, so
+per-layer flop/collective deltas must come from unrolled reduced-depth
+lowers (launch/dryrun.py::_depth_extrapolate)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_layers(cfg, f: Callable, init, xs):
+    """Semantics of ``jax.lax.scan(f, init, xs)`` (xs stacked on axis 0)."""
+    if getattr(cfg, "scan_layers", True):
+        return jax.lax.scan(f, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if not ys or ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, stacked

@@ -1,0 +1,432 @@
+"""Serving paths: cache init, prefill and single-token decode for every
+architecture family.  Caches are layer-stacked pytrees consumed by
+``lax.scan`` (one traced decode layer regardless of depth).
+
+Cache shapes per family (L = layers, B = batch, S = max_seq):
+  dense/moe/vlm : k,v            (L, B, S, Hkv, hd)
+  mla (deepseek): c_kv (L,B,S,lat), k_rope (L,B,S,rope)   — compressed!
+  ssm (mamba1)  : conv (L,B,K-1,dI), h (L,B,dI,N)          — O(1) in S
+  hybrid        : trunk conv/h (as ssm) + per-site shared-attn k,v
+  encdec        : decoder self k,v + precomputed cross k,v (enc_seq)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (_repeat_kv, attention, attention_decode, attention_init,
+                     cross_attention, mlp, rmsnorm, sdpa_full, sinusoidal_pos)
+from .lm import _dense_block, _moe_block, _shared_cfg, logits_fn
+from .scan_util import scan_layers as _scan_or_unroll
+
+Params = Dict[str, Any]
+
+
+# =============================================================================
+# cache init
+# =============================================================================
+
+def init_cache(cfg, batch: int, max_seq: int) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    L = cfg.n_layers
+
+    def kv(layers, heads, hd, seq):
+        return {"k": jnp.zeros((layers, batch, seq, heads, hd), dt),
+                "v": jnp.zeros((layers, batch, seq, heads, hd), dt)}
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.mla:
+            return {"c_kv": jnp.zeros((L, batch, max_seq, cfg.kv_lora_rank), dt),
+                    "k_rope": jnp.zeros((L, batch, max_seq, cfg.qk_rope_dim), dt)}
+        return kv(L, cfg.n_kv_heads, cfg.hd, max_seq)
+    if fam == "ssm":
+        return {"conv": jnp.zeros((L, batch, cfg.d_conv - 1, cfg.d_inner),
+                                  jnp.float32),
+                "h": jnp.zeros((L, batch, cfg.d_inner, cfg.ssm_state),
+                               jnp.float32)}
+    if fam == "hybrid":
+        n_sites = cfg.n_layers // cfg.shared_attn_every
+        scfg = _shared_cfg(cfg)
+        k = cfg.d_conv - 1
+        return {
+            "conv_x": jnp.zeros((L, batch, k, cfg.d_inner), jnp.float32),
+            "conv_b": jnp.zeros((L, batch, k, cfg.ssm_state), jnp.float32),
+            "conv_c": jnp.zeros((L, batch, k, cfg.ssm_state), jnp.float32),
+            "h": jnp.zeros((L, batch, cfg.n_ssm_heads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32),
+            "shared": kv(n_sites, scfg.n_kv_heads, scfg.hd, max_seq),
+        }
+    if fam == "encdec":
+        return {
+            "self": kv(L, cfg.n_kv_heads, cfg.hd, max_seq),
+            "cross": kv(L, cfg.n_kv_heads, cfg.hd, cfg.enc_seq),
+        }
+    raise ValueError(fam)
+
+
+# =============================================================================
+# prefill — forward over the prompt, emitting the cache
+# =============================================================================
+
+def prefill(params: Params, cfg, tokens: jnp.ndarray,
+            extra: Optional[Dict[str, jnp.ndarray]] = None):
+    """tokens (B,S) → (last-token logits (B,V), cache, next_pos (B,))."""
+    extra = extra or {}
+    b, s = tokens.shape
+    x = params["embed"]["tok"][tokens]
+    fam = cfg.family
+    if fam == "vlm":
+        x = jnp.concatenate([extra["vis_embeds"].astype(x.dtype), x], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def scan_emit(block_fn, stack, h):
+        def body(hh, lp):
+            hh, cache_l = block_fn(lp, hh)
+            return hh, cache_l
+        return _scan_or_unroll(cfg, body, h, stack)
+
+    cache: Params
+    if fam in ("dense", "vlm"):
+        def blk(lp, h):
+            hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+            if cfg.mla:
+                a, lat = mla_mod.mla_attention(lp["attn"], cfg, hn, positions,
+                                               return_latent=True)
+                kv = {"c_kv": lat[0], "k_rope": lat[1]}
+            else:
+                a, (k, v) = attention(lp["attn"], cfg, hn, positions,
+                                      return_kv=True)
+                kv = {"k": k, "v": v}
+            h = h + a
+            h = h + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
+            return h, kv
+        x, cache = scan_emit(blk, params["layers"], x)
+    elif fam == "moe":
+        def blk_dense(lp, h):
+            hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+            if cfg.mla:
+                a, lat = mla_mod.mla_attention(lp["attn"], cfg, hn, positions,
+                                               return_latent=True)
+                kv = {"c_kv": lat[0], "k_rope": lat[1]}
+            else:
+                a, (k, v) = attention(lp["attn"], cfg, hn, positions,
+                                      return_kv=True)
+                kv = {"k": k, "v": v}
+            h = h + a
+            h = h + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
+            return h, kv
+
+        def blk_moe(lp, h):
+            hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+            if cfg.mla:
+                a, lat = mla_mod.mla_attention(lp["attn"], cfg, hn, positions,
+                                               return_latent=True)
+                kv = {"c_kv": lat[0], "k_rope": lat[1]}
+            else:
+                a, (k, v) = attention(lp["attn"], cfg, hn, positions,
+                                      return_kv=True)
+                kv = {"k": k, "v": v}
+            h = h + a
+            y, _ = moe_mod.moe_apply(lp["moe"], cfg,
+                                     rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
+            return h + y, kv
+
+        caches = []
+        if cfg.first_dense_layers:
+            x, c0 = scan_emit(blk_dense, params["dense_layers"], x)
+            caches.append(c0)
+        x, c1 = scan_emit(blk_moe, params["moe_layers"], x)
+        caches.append(c1)
+        cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *caches) \
+            if len(caches) > 1 else caches[0]
+    elif fam == "ssm":
+        def blk(lp, h):
+            y, st = ssm_mod.mamba1_apply(
+                lp["mamba"], cfg, rmsnorm(lp["norm"], h, cfg.norm_eps),
+                return_state=True)
+            return h + y, st
+        x, cache = scan_emit(blk, params["layers"], x)
+    elif fam == "hybrid":
+        x, cache = _hybrid_prefill(params, cfg, x, positions)
+    elif fam == "encdec":
+        x, cache = _encdec_prefill(params, cfg, x, positions, extra)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, cfg, x[:, -1])
+    next_pos = jnp.full((b,), x.shape[1], jnp.int32)
+    return logits, cache, next_pos
+
+
+def _hybrid_prefill(params, cfg, x, positions):
+    every = cfg.shared_attn_every
+    n_sites = cfg.n_layers // every
+    n_body = n_sites * every
+    emb0 = x
+    scfg = _shared_cfg(cfg)
+
+    seg_stack = jax.tree.map(
+        lambda a: a[:n_body].reshape((n_sites, every) + a.shape[1:]),
+        params["layers"])
+    tail_stack = jax.tree.map(lambda a: a[n_body:], params["layers"])
+
+    def mamba_blk(lp, h):
+        y, st = ssm_mod.mamba2_apply(
+            lp["mamba"], cfg, rmsnorm(lp["norm"], h, cfg.norm_eps),
+            return_state=True)
+        return h + y, st
+
+    def segment(h, seg):
+        seg_layers, site_proj, site_idx = seg
+        h, trunk_cache = _scan_or_unroll(
+            cfg, lambda hh, lp: mamba_blk(lp, hh), h, seg_layers)
+        block_idx = site_idx % cfg.n_shared_blocks
+        sp = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, block_idx, 0,
+                                                   keepdims=False),
+            params["shared"])
+        cat = jnp.concatenate([h, emb0], axis=-1)
+        a, (k, v) = attention(sp["attn"], scfg,
+                              rmsnorm(sp["norm"], cat, cfg.norm_eps),
+                              positions, return_kv=True)
+        u = cat + a
+        u = u + mlp(sp["mlp"], rmsnorm(sp["mlp_norm"], u, cfg.norm_eps))
+        h = h + u @ site_proj
+        return h, (trunk_cache, {"k": k, "v": v})
+
+    x, (seg_caches, shared_cache) = _scan_or_unroll(
+        cfg, segment, x,
+        (seg_stack, params["site_proj"], jnp.arange(n_sites)))
+    if n_body < cfg.n_layers:
+        x, tail_cache = _scan_or_unroll(
+            cfg, lambda hh, lp: (mamba_blk(lp, hh)), x, tail_stack)
+        trunk = jax.tree.map(
+            lambda a, t: jnp.concatenate(
+                [a.reshape((n_body,) + a.shape[2:]), t], axis=0),
+            seg_caches, tail_cache)
+    else:
+        trunk = jax.tree.map(
+            lambda a: a.reshape((n_body,) + a.shape[2:]), seg_caches)
+    trunk["shared"] = shared_cache
+    return x, trunk
+
+
+def _encdec_prefill(params, cfg, x, positions, extra):
+    frames = extra["frames"].astype(x.dtype)
+    e = frames + sinusoidal_pos(frames.shape[1], cfg.d_model).astype(x.dtype)
+    ecfg = dataclasses.replace(cfg, attn_chunk=0)
+
+    def enc_block(h, lp):
+        h = h + attention(lp["attn"], ecfg,
+                          rmsnorm(lp["attn_norm"], h, cfg.norm_eps),
+                          jnp.broadcast_to(jnp.arange(h.shape[1]),
+                                           h.shape[:2]))
+        h = h + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
+        return h, None
+
+    e, _ = _scan_or_unroll(cfg, enc_block, e, params["enc_layers"])
+    e = rmsnorm(params["enc_norm"], e, cfg.norm_eps)
+    x = x + sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def dec_block(h, lp):
+        hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        a, (k, v) = attention(lp["attn"], cfg, hn, positions, return_kv=True)
+        h = h + a
+        # precompute this layer's cross K/V from the encoder output
+        b_, f_ = e.shape[0], e.shape[1]
+        ck = (e @ lp["cross"]["wk"]).reshape(b_, f_, cfg.n_kv_heads, cfg.hd)
+        cv = (e @ lp["cross"]["wv"]).reshape(b_, f_, cfg.n_kv_heads, cfg.hd)
+        h = h + cross_attention(lp["cross"], cfg,
+                                rmsnorm(lp["cross_norm"], h, cfg.norm_eps), e)
+        h = h + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
+        return h, {"self": {"k": k, "v": v}, "cross": {"k": ck, "v": cv}}
+
+    x, caches = _scan_or_unroll(cfg, dec_block, x, params["dec_layers"])
+    return x, {"self": caches["self"], "cross": caches["cross"]}
+
+
+# =============================================================================
+# decode — one token against the cache
+# =============================================================================
+
+def decode_step(params: Params, cfg, cache: Params, tokens: jnp.ndarray,
+                pos: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """tokens (B,1), pos (B,) → (logits (B,V), new cache).  Cache buffers
+    are donated by the jitted serve_step wrapper."""
+    fam = cfg.family
+    x = params["embed"]["tok"][tokens]
+    if fam in ("dense", "vlm", "moe"):
+        x, cache = _decode_attn_stack(params, cfg, cache, x, pos)
+    elif fam == "ssm":
+        def body(h, inp):
+            lp, cl = inp
+            y, cl2 = ssm_mod.mamba1_decode(
+                lp["mamba"], cfg, rmsnorm(lp["norm"], h, cfg.norm_eps), cl)
+            return h + y, cl2
+        x, cache = _scan_or_unroll(cfg, body, x, (params["layers"], cache))
+    elif fam == "hybrid":
+        x, cache = _decode_hybrid(params, cfg, cache, x, pos)
+    elif fam == "encdec":
+        x, cache = _decode_encdec(params, cfg, cache, x, pos)
+    else:
+        raise ValueError(fam)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, x[:, 0]), cache
+
+
+def _decode_attn_stack(params, cfg, cache, x, pos):
+    stacks = []
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        nd = cfg.first_dense_layers
+        cache_d = jax.tree.map(lambda a: a[:nd], cache)
+        cache_m = jax.tree.map(lambda a: a[nd:], cache)
+
+        def body_d(h, inp):
+            lp, cl = inp
+            h, cl2 = _decode_block(lp, cfg, h, cl, pos, moe=False)
+            return h, cl2
+
+        def body_m(h, inp):
+            lp, cl = inp
+            h, cl2 = _decode_block(lp, cfg, h, cl, pos, moe=True)
+            return h, cl2
+
+        x, c0 = _scan_or_unroll(cfg, body_d, x,
+                                (params["dense_layers"], cache_d))
+        x, c1 = _scan_or_unroll(cfg, body_m, x,
+                                (params["moe_layers"], cache_m))
+        cache = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                             c0, c1)
+        return x, cache
+
+    stack = params["layers"] if cfg.family != "moe" else params["moe_layers"]
+    is_moe = cfg.family == "moe"
+
+    def body(h, inp):
+        lp, cl = inp
+        h, cl2 = _decode_block(lp, cfg, h, cl, pos, moe=is_moe)
+        return h, cl2
+
+    return _scan_or_unroll(cfg, body, x, (stack, cache))
+
+
+def _decode_block(lp, cfg, h, cl, pos, moe: bool):
+    hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+    if cfg.mla:
+        a, cl2 = mla_mod.mla_decode(lp["attn"], cfg, hn, cl, pos)
+    else:
+        a, (ck, cv) = attention_decode(lp["attn"], cfg, hn,
+                                       (cl["k"], cl["v"]), pos)
+        cl2 = {"k": ck, "v": cv}
+    h = h + a
+    hn = rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+    if moe:
+        y, _ = moe_mod.moe_apply(lp["moe"], cfg, hn)
+    else:
+        y = mlp(lp["mlp"], hn)
+    return h + y, cl2
+
+
+def _decode_hybrid(params, cfg, cache, x, pos):
+    every = cfg.shared_attn_every
+    n_sites = cfg.n_layers // every
+    n_body = n_sites * every
+    emb0 = x
+    scfg = _shared_cfg(cfg)
+
+    trunk_cache = {k_: cache[k_]
+                   for k_ in ("conv_x", "conv_b", "conv_c", "h")}
+    seg_cache = jax.tree.map(
+        lambda a: a[:n_body].reshape((n_sites, every) + a.shape[1:]),
+        trunk_cache)
+    tail_cache = jax.tree.map(lambda a: a[n_body:], trunk_cache)
+    seg_stack = jax.tree.map(
+        lambda a: a[:n_body].reshape((n_sites, every) + a.shape[1:]),
+        params["layers"])
+    tail_stack = jax.tree.map(lambda a: a[n_body:], params["layers"])
+
+    def mamba_step(h, inp):
+        lp, cl = inp
+        y, cl2 = ssm_mod.mamba2_decode(
+            lp["mamba"], cfg, rmsnorm(lp["norm"], h, cfg.norm_eps), cl)
+        return h + y, cl2
+
+    def segment(h, inp):
+        seg_layers, cl_seg, shared_kv, site_proj, site_idx = inp
+        h, cl_seg2 = _scan_or_unroll(cfg, mamba_step, h,
+                                     (seg_layers, cl_seg))
+        block_idx = site_idx % cfg.n_shared_blocks
+        sp = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, block_idx, 0,
+                                                   keepdims=False),
+            params["shared"])
+        cat = jnp.concatenate([h, emb0], axis=-1)
+        a, (ck, cv) = attention_decode(
+            sp["attn"], scfg, rmsnorm(sp["norm"], cat, cfg.norm_eps),
+            (shared_kv["k"], shared_kv["v"]), pos)
+        u = cat + a
+        u = u + mlp(sp["mlp"], rmsnorm(sp["mlp_norm"], u, cfg.norm_eps))
+        h = h + u @ site_proj
+        return h, (cl_seg2, {"k": ck, "v": cv})
+
+    x, (seg_cache2, shared2) = _scan_or_unroll(
+        cfg, segment, x, (seg_stack, seg_cache, cache["shared"],
+                          params["site_proj"], jnp.arange(n_sites)))
+    if n_body < cfg.n_layers:
+        x, tail2 = _scan_or_unroll(cfg, mamba_step, x,
+                                   (tail_stack, tail_cache))
+        trunk2 = jax.tree.map(
+            lambda a, t: jnp.concatenate(
+                [a.reshape((n_body,) + a.shape[2:]), t], axis=0),
+            seg_cache2, tail2)
+    else:
+        trunk2 = jax.tree.map(
+            lambda a: a.reshape((n_body,) + a.shape[2:]), seg_cache2)
+    trunk2["shared"] = shared2
+    return x, trunk2
+
+
+def _sin_pos_at(pos: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Sinusoidal embedding at per-batch positions: (B,) → (B,1,d)."""
+    div = jnp.exp(-jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (jnp.log(10000.0) / d))
+    ang = pos[:, None].astype(jnp.float32) * div[None]
+    pe = jnp.zeros((pos.shape[0], d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe[:, None]
+
+
+def _decode_encdec(params, cfg, cache, x, pos):
+    x = x + _sin_pos_at(pos, cfg.d_model).astype(x.dtype)
+
+    def body(h, inp):
+        lp, cl_self, cl_cross = inp
+        hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        a, (ck, cv) = attention_decode(lp["attn"], cfg, hn,
+                                       (cl_self["k"], cl_self["v"]), pos)
+        h = h + a
+        # cross attention against the precomputed encoder K/V
+        hn = rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
+        b_ = h.shape[0]
+        q = (hn @ lp["cross"]["wq"]).reshape(b_, 1, cfg.n_heads, cfg.hd)
+        k = _repeat_kv(cl_cross["k"], cfg.n_heads)
+        v = _repeat_kv(cl_cross["v"], cfg.n_heads)
+        o = sdpa_full(q, k, v, causal=False)
+        h = h + o.reshape(b_, 1, -1) @ lp["cross"]["wo"]
+        h = h + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
+        return h, {"k": ck, "v": cv}
+
+    x, self2 = _scan_or_unroll(cfg, body, x,
+                               (params["dec_layers"], cache["self"],
+                                cache["cross"]))
+    return x, {"self": self2, "cross": cache["cross"]}

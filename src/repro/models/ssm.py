@@ -1,0 +1,369 @@
+"""State-space blocks: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2 trunk).
+
+Scan strategies:
+  * ``*_scan_ref``   — per-timestep ``lax.scan`` (the oracle; O(S) steps).
+  * Mamba1 chunked   — ``associative_scan`` inside fixed-size chunks with a
+    sequential carry across chunks (bounds the (B,Q,dI,N) working set).
+  * Mamba2 SSD       — the matmul ("attention-like") chunk form: intra-chunk
+    via (Q×Q) decay-masked score matmuls, inter-chunk via a carried state.
+    This is the TPU-native formulation (MXU matmuls instead of elementwise
+    recurrences).
+
+Both carry exact single-step ``*_decode`` updates for serving (O(1) state:
+the sub-quadratic long_500k story).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_sharding import constrain
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+Params = Dict[str, Any]
+
+SSM_CHUNK = 128
+
+
+# --- causal depthwise conv (K taps) -------------------------------------------
+
+def conv1d_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,C), w: (C,K), b: (C,).  y_t = sum_k w[:,k] x_{t-K+1+k}."""
+    k = w.shape[1]
+    out = x * w[None, None, :, -1]
+    for i in range(k - 1):
+        shift = k - 1 - i
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xs * w[None, None, :, i]
+    return out + b[None, None, :]
+
+
+def conv1d_step(window: jnp.ndarray, xt: jnp.ndarray, w: jnp.ndarray,
+                b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """window: (B,K-1,C) past inputs; xt: (B,C) new input.
+    Returns (y (B,C), new window)."""
+    full = jnp.concatenate([window, xt[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,ck->bc", full, w) + b[None, :]
+    return y, full[:, 1:]
+
+
+# --- linear recurrence h_t = a_t h_{t-1} + b_t ----------------------------------
+
+def _assoc_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, b1 * a2 + b2
+
+
+def linear_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                    h0: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: a,b (B,S,...), h0 (B,...) → h (B,S,...) via stepwise scan."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    aT = jnp.moveaxis(a, 1, 0)
+    bT = jnp.moveaxis(b, 1, 0)
+    _, hs = jax.lax.scan(step, h0, (aT, bT))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def linear_scan_chunked(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                        chunk: int = SSM_CHUNK) -> jnp.ndarray:
+    """Chunked associative scan; exact (same recurrence, fp32)."""
+    bsz, s = a.shape[:2]
+    if s % chunk != 0:
+        return linear_scan_ref(a, b, h0)
+    nc = s // chunk
+    ar = a.reshape((bsz, nc, chunk) + a.shape[2:])
+    br = b.reshape((bsz, nc, chunk) + b.shape[2:])
+
+    def outer(h, inp):
+        ac, bc = inp                                # (B, Q, ...)
+        pa, pb = jax.lax.associative_scan(_assoc_combine, (ac, bc), axis=1)
+        hs = pb + pa * h[:, None]
+        return hs[:, -1], hs
+
+    _, hs = jax.lax.scan(outer, h0, (jnp.moveaxis(ar, 1, 0),
+                                     jnp.moveaxis(br, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1)                     # (B, nc, Q, ...)
+    return hs.reshape((bsz, s) + a.shape[2:])
+
+
+# =============================================================================
+# Mamba1
+# =============================================================================
+
+def mamba1_init(key, cfg) -> Params:
+    d, di, n, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dtr
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (di, cfg.d_conv), jnp.float32)
+                   * 0.2).astype(jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * n, dt),
+        "dt_proj": dense_init(ks[3], dtr, di, jnp.float32),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus ≈ 0.01
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dt),
+    }
+
+
+def _mamba1_scan_inputs(p: Params, cfg, x: jnp.ndarray):
+    """Shared front end: returns (a, b, c_t, z, xin) for the recurrence."""
+    di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dtr
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                 # (B,S,dI) each
+    xin = jax.nn.silu(conv1d_causal(xin.astype(jnp.float32), p["conv_w"],
+                                    p["conv_b"])).astype(x.dtype)
+    proj = xin @ p["x_proj"]                           # (B,S,dtr+2N)
+    dt_raw = proj[..., :dtr]
+    b_in = proj[..., dtr:dtr + n].astype(jnp.float32)
+    c_in = proj[..., dtr + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) @ p["dt_proj"]
+                         + p["dt_bias"])               # (B,S,dI)
+    a_mat = -jnp.exp(p["a_log"])                       # (dI,N)
+    a = jnp.exp(dt[..., None] * a_mat[None, None])     # (B,S,dI,N)
+    b = (dt * xin.astype(jnp.float32))[..., None] * b_in[..., None, :]
+    return a, b, c_in, z, xin
+
+
+def mamba1_apply(p: Params, cfg, x: jnp.ndarray, chunked: bool = True,
+                 return_state: bool = False):
+    bsz, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    # pre-conv input needed for the decode conv window
+    xz = x @ p["in_proj"]
+    xin_raw = jnp.split(xz, 2, axis=-1)[0]
+    a, b, c_in, z, xin = _mamba1_scan_inputs(p, cfg, x)
+    a = constrain(a, "dp", None, "tp", None)
+    b = constrain(b, "dp", None, "tp", None)
+    h0 = constrain(jnp.zeros((bsz, di, n), jnp.float32), "dp", "tp", None)
+    scan = linear_scan_chunked if chunked else linear_scan_ref
+    h = scan(a, b, h0)                                 # (B,S,dI,N)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_in) \
+        + p["d_skip"][None, None] * xin.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        k = cfg.d_conv - 1
+        window = xin_raw[:, -k:].astype(jnp.float32)   # (B,K-1,dI)
+        return out, {"conv": window, "h": h[:, -1]}
+    return out
+
+
+def mamba1_init_cache(cfg, batch: int):
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), jnp.float32),
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def mamba1_decode(p: Params, cfg, x: jnp.ndarray, cache: Params):
+    """x: (B,1,d) → (out (B,1,d), new cache).  Exact one-step recurrence."""
+    bsz = x.shape[0]
+    di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dtr
+    xz = x[:, 0] @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                 # (B,dI)
+    xc, conv = conv1d_step(cache["conv"], xin.astype(jnp.float32),
+                           p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    proj = xc.astype(x.dtype) @ p["x_proj"]
+    dt_raw = proj[..., :dtr]
+    b_in = proj[..., dtr:dtr + n].astype(jnp.float32)
+    c_in = proj[..., dtr + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) @ p["dt_proj"]
+                         + p["dt_bias"])               # (B,dI)
+    a_mat = -jnp.exp(p["a_log"])
+    a = jnp.exp(dt[..., None] * a_mat[None])           # (B,dI,N)
+    b = (dt * xc)[..., None] * b_in[:, None, :]
+    h = a * cache["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, c_in) + p["d_skip"][None] * xc
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return (y @ p["out_proj"])[:, None], {"conv": conv, "h": h}
+
+
+# =============================================================================
+# Mamba2 (SSD)
+# =============================================================================
+
+def mamba2_init(key, cfg) -> Params:
+    """Projections for z / x / B / C / dt are SEPARATE weights (not one
+    concatenated in_proj) so each shards cleanly over the TP axis; the
+    depthwise conv splits exactly across the channel groups (DESIGN.md §5)."""
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.n_ssm_heads
+    ks = jax.random.split(key, 9)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_z": dense_init(ks[0], d, di, dt),
+        "in_x": dense_init(ks[1], d, di, dt),
+        "in_b": dense_init(ks[2], d, n, dt),
+        "in_c": dense_init(ks[3], d, n, dt),
+        "in_dt": dense_init(ks[4], d, h, dt),
+        "conv_w_x": jax.random.normal(ks[5], (di, cfg.d_conv),
+                                      jnp.float32) * 0.2,
+        "conv_b_x": jnp.zeros((di,), jnp.float32),
+        "conv_w_b": jax.random.normal(ks[6], (n, cfg.d_conv),
+                                      jnp.float32) * 0.2,
+        "conv_b_b": jnp.zeros((n,), jnp.float32),
+        "conv_w_c": jax.random.normal(ks[7], (n, cfg.d_conv),
+                                      jnp.float32) * 0.2,
+        "conv_b_c": jnp.zeros((n,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(0) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "out_proj": dense_init(ks[8], di, d, dt),
+    }
+
+
+def _mamba2_front(p: Params, cfg, x: jnp.ndarray):
+    z = x @ p["in_z"]
+    dt_raw = x @ p["in_dt"]                             # (B,S,H)
+    xin = jax.nn.silu(conv1d_causal((x @ p["in_x"]).astype(jnp.float32),
+                                    p["conv_w_x"], p["conv_b_x"]))
+    b_in = jax.nn.silu(conv1d_causal((x @ p["in_b"]).astype(jnp.float32),
+                                     p["conv_w_b"], p["conv_b_b"]))
+    c_in = jax.nn.silu(conv1d_causal((x @ p["in_c"]).astype(jnp.float32),
+                                     p["conv_w_c"], p["conv_b_c"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, None] * dt)  # (B,S,H) decay
+    return xin, b_in, c_in, dt, a, z
+
+
+def mamba2_apply(p: Params, cfg, x: jnp.ndarray, chunk: int = SSM_CHUNK,
+                 return_state: bool = False):
+    """SSD matmul-form chunked scan."""
+    bsz, s, _ = x.shape
+    nh, pdim, n = cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    xin, b_in, c_in, dt, a, z = _mamba2_front(p, cfg, x)
+    xin = constrain(xin, "dp", None, "tp")
+    xh = xin.reshape(bsz, s, nh, pdim)                  # (B,S,H,P)
+    xdt = xh * dt[..., None]                            # dt-scaled input
+    if s % chunk != 0:
+        chunk = s                                       # single chunk
+    nc = s // chunk
+
+    def reshape_c(t):
+        return t.reshape((bsz, nc, chunk) + t.shape[2:])
+
+    xdt_c = jnp.moveaxis(reshape_c(xdt), 1, 0)          # (nc,B,Q,H,P)
+    b_c = jnp.moveaxis(reshape_c(b_in), 1, 0)           # (nc,B,Q,N)
+    c_c = jnp.moveaxis(reshape_c(c_in), 1, 0)
+    la_c = jnp.moveaxis(reshape_c(jnp.log(jnp.maximum(a, 1e-30))), 1, 0)
+
+    qi = jnp.arange(chunk)
+
+    def body(hprev, inp):
+        xd, bb, cc, la = inp                            # (B,Q,H,P),(B,Q,N)...
+        lac = jnp.cumsum(la, axis=1)                    # (B,Q,H) inclusive
+        # intra-chunk
+        scores = jnp.einsum("bin,bjn->bij", cc, bb)     # (B,Q,Q)
+        decay = jnp.exp(lac[:, :, None] - lac[:, None, :, :])  # (B,Q,Q,H)
+        mask = (qi[:, None] >= qi[None, :])[None, :, :, None]
+        decay = jnp.where(mask, decay, 0.0)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, decay, xd)
+        # inter-chunk (contribution of carried state)
+        state_decay = jnp.exp(lac)                      # (B,Q,H)
+        y_inter = jnp.einsum("bin,bih,bhpn->bihp",
+                             cc, state_decay, hprev)
+        # chunk summary → next carry
+        tail = jnp.exp(lac[:, -1:, :] - lac)            # (B,Q,H)
+        s_c = jnp.einsum("bjn,bjh,bjhp->bhpn", bb, tail, xd)
+        hnew = hprev * jnp.exp(lac[:, -1])[..., None, None] + s_c
+        return hnew, y_intra + y_inter
+
+    h0 = constrain(jnp.zeros((bsz, nh, pdim, n), jnp.float32),
+                   "dp", "tp", None, None)
+    h_last, ys = jax.lax.scan(body, h0, (xdt_c, b_c, c_c, la_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, nh, pdim)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, -1)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        k = cfg.d_conv - 1
+        return out, {
+            "conv_x": (x @ p["in_x"])[:, -k:].astype(jnp.float32),
+            "conv_b": (x @ p["in_b"])[:, -k:].astype(jnp.float32),
+            "conv_c": (x @ p["in_c"])[:, -k:].astype(jnp.float32),
+            "h": h_last,
+        }
+    return out
+
+
+def mamba2_apply_ref(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """Stepwise-oracle SSD (same front end, per-token recurrence)."""
+    bsz, s, _ = x.shape
+    nh, pdim, n = cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    xin, b_in, c_in, dt, a, z = _mamba2_front(p, cfg, x)
+    xh = xin.reshape(bsz, s, nh, pdim)
+    xdt = xh * dt[..., None]
+    b_full = b_in[:, :, None, None, :] * xdt[..., None]     # (B,S,H,P,N)
+    a_full = jnp.broadcast_to(a[..., None, None],
+                              (bsz, s, nh, pdim, n))
+    h = linear_scan_ref(a_full, b_full,
+                        jnp.zeros((bsz, nh, pdim, n), jnp.float32))
+    y = jnp.einsum("bshpn,bsn->bshp", h, c_in)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, -1)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba2_init_cache(cfg, batch: int):
+    di, n = cfg.d_inner, cfg.ssm_state
+    k = cfg.d_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, k, di), jnp.float32),
+        "conv_b": jnp.zeros((batch, k, n), jnp.float32),
+        "conv_c": jnp.zeros((batch, k, n), jnp.float32),
+        "h": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_headdim, n),
+                       jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, cfg, x: jnp.ndarray, cache: Params):
+    bsz = x.shape[0]
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh, pdim = cfg.n_ssm_heads, cfg.ssm_headdim
+    xt = x[:, 0]
+    z = xt @ p["in_z"]
+    dt_raw = xt @ p["in_dt"]
+    xr, conv_x = conv1d_step(cache["conv_x"],
+                             (xt @ p["in_x"]).astype(jnp.float32),
+                             p["conv_w_x"], p["conv_b_x"])
+    br, conv_b = conv1d_step(cache["conv_b"],
+                             (xt @ p["in_b"]).astype(jnp.float32),
+                             p["conv_w_b"], p["conv_b_b"])
+    cr, conv_c = conv1d_step(cache["conv_c"],
+                             (xt @ p["in_c"]).astype(jnp.float32),
+                             p["conv_w_c"], p["conv_b_c"])
+    xin = jax.nn.silu(xr).reshape(bsz, nh, pdim)
+    b_in = jax.nn.silu(br)
+    c_in = jax.nn.silu(cr)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["a_log"])[None] * dt)                     # (B,H)
+    xdt = xin * dt[..., None]
+    h = cache["h"] * a[..., None, None] \
+        + b_in[:, None, None, :] * xdt[..., None]
+    y = jnp.einsum("bhpn,bn->bhp", h, c_in) \
+        + p["d_skip"][None, :, None] * xin
+    y = y.reshape(bsz, -1)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], {
+        "conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c, "h": h}

@@ -1,0 +1,8 @@
+from .optimizers import (OptState, adamw_init, adamw_update, adafactor_init,
+                         adafactor_update, clip_by_global_norm,
+                         cosine_schedule, default_optimizer_for, global_norm,
+                         make_optimizer)
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "adafactor_init",
+           "adafactor_update", "clip_by_global_norm", "make_optimizer",
+           "cosine_schedule", "default_optimizer_for", "global_norm"]

@@ -1,0 +1,154 @@
+"""Optimizers (no external deps): AdamW and Adafactor over arbitrary pytrees.
+
+Adafactor (factored second moment) is selected automatically for the
+≥600 B-parameter MoEs: full Adam moments for a 1 T-param model are 8 TB of
+fp32 — more than a 512-chip v5e pod's HBM — while factored moments are
+~O(rows+cols) (see EXPERIMENTS.md §Dry-run memory table).
+
+All states are elementwise (Adam) or row/col reductions (Adafactor) of the
+parameters, so they inherit the parameter PartitionSpecs (ZeRO-style: the
+FSDP axis shards them with the weights).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Pytree
+
+
+# --- utils --------------------------------------------------------------------
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# --- AdamW -----------------------------------------------------------------------
+
+def adamw_init(params: Pytree) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), {"m": zeros, "v": jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)})
+
+
+def adamw_update(grads: Pytree, state: OptState, params: Pytree,
+                 lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, wd: float = 0.1) -> Tuple[Pytree, OptState]:
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        u = u + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.inner["m"])
+    flat_v = treedef.flatten_up_to(state.inner["v"])
+    new = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([n[0] for n in new])
+    new_m = treedef.unflatten([n[1] for n in new])
+    new_v = treedef.unflatten([n[2] for n in new])
+    return new_p, OptState(step, {"m": new_m, "v": new_v})
+
+
+# --- Adafactor -----------------------------------------------------------------------
+
+def adafactor_init(params: Pytree) -> OptState:
+    def init_leaf(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(init_leaf, params,
+                                 is_leaf=lambda x: isinstance(x, jnp.ndarray)))
+
+
+def adafactor_update(grads: Pytree, state: OptState, params: Pytree,
+                     lr, decay: float = 0.99, eps: float = 1e-30,
+                     clip_thresh: float = 1.0, wd: float = 0.0
+                     ) -> Tuple[Pytree, OptState]:
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+
+    def upd(g, s, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            v_hat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+            u = g * jax.lax.rsqrt(jnp.maximum(v_hat, eps))
+            ns = {"vr": vr, "vc": vc}
+        else:
+            v = decay * s["v"] + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+            ns = {"v": v}
+        # update clipping (RMS-based)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip_thresh)
+        u = u + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), ns
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state.inner)
+    new = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = treedef.unflatten([n[0] for n in new])
+    new_s = treedef.unflatten([n[1] for n in new])
+    return new_p, OptState(step, new_s)
+
+
+# --- factory -----------------------------------------------------------------------
+
+def make_optimizer(name: str, lr, **kw):
+    """Returns (init_fn, update_fn(grads, state, params) -> (params, state))."""
+    if name == "adamw":
+        return adamw_init, functools.partial(adamw_update, lr=lr, **kw)
+    if name == "adafactor":
+        return adafactor_init, functools.partial(adafactor_update, lr=lr, **kw)
+    raise ValueError(name)
+
+
+def default_optimizer_for(cfg) -> str:
+    """Adafactor for the ≥600B MoEs (HBM fit — DESIGN.md §5), AdamW else."""
+    return "adafactor" if cfg.param_count() > 3e11 else "adamw"

@@ -1,0 +1,74 @@
+"""Step builders: train / prefill / decode as pure jittable functions.
+
+``make_train_step`` closes over the optimizer; the returned function has
+signature ``(params, opt_state, batch) -> (params, opt_state, metrics)`` and
+is what the dry-run lowers with full-size ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm, serving
+from repro.optim import (clip_by_global_norm, cosine_schedule,
+                         default_optimizer_for, make_optimizer)
+
+Pytree = Any
+
+
+def make_train_step(cfg, optimizer: str = "auto", lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10000,
+                    grad_clip: float = 1.0):
+    """Returns (train_step, opt_init)."""
+    if optimizer == "auto":
+        optimizer = default_optimizer_for(cfg)
+    sched = cosine_schedule(lr, warmup, total_steps)
+    opt_init, opt_update = make_optimizer(optimizer, sched)
+
+    def train_step(params: Pytree, opt_state, batch: Dict[str, jnp.ndarray]):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, cfg, batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = opt_update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step, opt_init
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        logits, cache, pos = serving.prefill(params, cfg, batch["tokens"],
+                                             extra=extra)
+        return logits, cache, pos
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    """One-token decode; the cache argument is donated by callers that jit
+    with ``donate_argnums=(1,)``."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = serving.decode_step(params, cfg, cache, tokens, pos)
+        return logits, cache
+
+    return serve_step
+
+
+def init_train_state(cfg, key, optimizer: str = "auto"):
+    """Host-side init (small configs); the dry-run uses jax.eval_shape over
+    this instead."""
+    if optimizer == "auto":
+        optimizer = default_optimizer_for(cfg)
+    opt_init, _ = make_optimizer(optimizer, 1e-4)
+    params = lm.init_params(key, cfg)
+    opt_state = opt_init(params)
+    return params, opt_state

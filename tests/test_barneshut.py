@@ -1,0 +1,199 @@
+"""Barnes-Hut application tests (paper §4.2): octree invariants, exact
+interaction-partition coverage, accuracy vs direct sum, hierarchical
+conflicts under the threaded executor, structural counts."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.apps import barneshut as bh
+from repro.core import simulate
+from repro.kernels.nbody import ref
+
+
+def cloud(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.random((n, 3)), rng.random(n) + 0.5
+
+
+def lattice(side):
+    """side³ particles at cell centres — deterministic octree shape."""
+    g = (np.arange(side) + 0.5) / side
+    x = np.stack(np.meshgrid(g, g, g, indexing="ij"), -1).reshape(-1, 3)
+    return x, np.ones(len(x))
+
+
+class TestOctree:
+    def test_contiguous_ranges(self):
+        x, m = cloud(500, 1)
+        t = bh.Octree(x, m, n_max=32)
+        for c in t.cells:
+            if c.split:
+                assert sum(t.cells[k].count for k in c.children) == c.count
+                starts = sorted(t.cells[k].start for k in c.children)
+                assert starts[0] == c.start
+        # particles in each leaf really are inside the leaf's box
+        for c in t.cells:
+            if not c.split:
+                xs = t.x[:, c.start:c.start + c.count]
+                for d in range(3):
+                    assert (xs[d] >= c.loc[d] - 1e-12).all()
+                    assert (xs[d] <= c.loc[d] + c.h + 1e-12).all()
+
+    def test_leaf_counts_bounded(self):
+        x, m = cloud(2000, 2)
+        t = bh.Octree(x, m, n_max=50)
+        for c in t.cells:
+            if not c.split:
+                assert c.count <= 50
+
+    def test_lattice_structure(self):
+        """32³ lattice, n_max=64: uniform depth-3 leaves (512 cells of 64)."""
+        x, m = lattice(32)
+        t = bh.Octree(x, m, n_max=64)
+        leaves = [c for c in t.cells if not c.split]
+        assert len(leaves) == 512
+        assert all(c.count == 64 for c in leaves)
+        assert len(t.cells) == 1 + 8 + 64 + 512
+
+
+class TestGraphStructure:
+    def test_lattice_task_counts(self):
+        """Deterministic analogue of the paper's 1M-particle counts: on a
+        4³ grid of stop cells the 26-neighbourhood gives
+        3·(3·4·4) + 6·(3·3·4) + 4·(3·3·3) = 468 pair tasks."""
+        x, m = lattice(32)
+        t = bh.Octree(x, m, n_max=64)
+        g = bh.build_graph(t, n_task=2000)
+        assert g.counts["self"] == 64          # stop cells at depth 2
+        assert g.counts["pair_pp"] == 468
+        assert g.counts["pair_pc"] == 512      # one per leaf
+        assert g.counts["com"] == len(t.cells)
+        assert g.counts["resources"] == len(t.cells)
+        # locks: self 1 + pair 2 + pc 1 (the paper's 43 416 formula)
+        assert g.counts["locks"] == 64 + 2 * 468 + 512
+
+    def test_hierarchical_resources(self):
+        x, m = cloud(800, 3)
+        t = bh.Octree(x, m, n_max=64)
+        g = bh.build_graph(t, n_task=256)
+        s = g.sched
+        for c in t.cells:
+            if c.parent != -1:
+                assert s.resources[c.res].parent == t.cells[c.parent].res
+
+    def test_exact_pair_coverage(self):
+        """THE partition invariant: every directed particle pair (p,q) is
+        covered exactly once — directly (self/pair blocks) or via the COM
+        of exactly one cell containing q in p's leaf list."""
+        x, m = cloud(300, 4)
+        t = bh.Octree(x, m, n_max=16)
+        g = bh.build_graph(t, n_task=64)
+        n = t.n
+        cover = np.zeros((n, n), dtype=np.int32)
+
+        def rng(cid):
+            c = t.cells[cid]
+            return slice(c.start, c.start + c.count)
+
+        for tid, cells in g.self_blocks.items():
+            for c in cells:
+                r = rng(c)
+                cover[r, r] += 1
+        for pairs in list(g.self_pairs.values()) + list(g.pair_pairs.values()):
+            for a, b in pairs:
+                cover[rng(a), rng(b)] += 1
+                cover[rng(b), rng(a)] += 1
+        for tid, srcs in g.pc_lists.items():
+            kind, leaf = g.task_cell[tid]
+            for src in srcs:
+                cover[rng(leaf), rng(src)] += 1
+        np.fill_diagonal(cover, 1)
+        assert (cover == 1).all(), (
+            f"coverage broken: min={cover.min()} max={cover.max()}")
+
+    def test_com_deps_bottom_up(self):
+        x, m = cloud(500, 5)
+        t = bh.Octree(x, m, n_max=32)
+        g = bh.build_graph(t, n_task=128)
+        s = g.sched
+        for c in t.cells:
+            if c.parent != -1:
+                assert t.cells[c.parent].task_com in s.tasks[c.task_com].unlocks
+
+
+class TestNumerics:
+    def test_accuracy_vs_direct(self):
+        x, m = cloud(1500, 6)
+        acc, st, g = bh.solve(x, m, n_max=32, n_task=256, backend="ref")
+        exact = ref.acc_direct_ref(st.x, st.m)
+        num = np.linalg.norm(np.asarray(acc) - np.asarray(exact), axis=0)
+        den = np.linalg.norm(np.asarray(exact), axis=0)
+        rel = num / np.maximum(den, 1e-12)
+        assert np.median(rel) < 2e-2, f"median rel err {np.median(rel)}"
+        assert rel.mean() < 5e-2
+
+    def test_direct_limit_exact(self):
+        """With n_max >= N the tree is one leaf: pure direct sum → matches
+        the O(N²) oracle to float tolerance."""
+        x, m = cloud(200, 7)
+        acc, st, _ = bh.solve(x, m, n_max=256, n_task=512, backend="ref")
+        exact = ref.acc_direct_ref(st.x, st.m)
+        assert_allclose(np.asarray(acc), np.asarray(exact), rtol=2e-4,
+                        atol=1e-5)
+
+    def test_pallas_backend_agrees(self):
+        x, m = cloud(600, 8)
+        a1, st1, _ = bh.solve(x, m, n_max=32, n_task=128, backend="ref")
+        a2, st2, _ = bh.solve(x, m, n_max=32, n_task=128, backend="pallas")
+        assert_allclose(np.asarray(a1), np.asarray(a2), rtol=2e-3, atol=1e-4)
+
+    def test_threaded_matches_sequential(self):
+        """4 worker threads with real hierarchical locks, in-place numpy
+        accumulation: locks alone must prevent lost updates."""
+        x, m = cloud(1200, 9)
+        tree = bh.Octree(x, m, n_max=32)
+        g1 = bh.build_graph(tree, n_task=128, nr_queues=1)
+        st1 = bh.BHState(g1, backend="ref")
+        st1.run("sequential")
+        tree2 = bh.Octree(x, m, n_max=32)
+        g2 = bh.build_graph(tree2, n_task=128, nr_queues=4)
+        st2 = bh.BHState(g2, backend="ref", accumulate="numpy")
+        st2.run("threaded", nr_workers=4)
+        assert_allclose(np.asarray(st1.result()), np.asarray(st2.result()),
+                        rtol=1e-3, atol=1e-4)
+
+    def test_momentum_roughly_conserved(self):
+        x, m = cloud(800, 10)
+        acc, st, _ = bh.solve(x, m, n_max=32, n_task=128, backend="ref")
+        p = np.asarray(acc) @ np.asarray(st.m)
+        scale = float(jnp.abs(acc).max() * jnp.sum(st.m))
+        assert np.abs(p).max() < 5e-2 * scale
+
+
+class TestScheduling:
+    def test_simulated_scaling(self):
+        """Paper Fig 11: ~90% parallel efficiency at 32 cores (scheduler
+        limited; the >32-core falloff is hardware, not scheduling).  The
+        paper's granularity gives ≥8 stop cells per worker (512 cells / 64
+        cores); mirror that ratio here — with too-coarse tasks the per-cell
+        conflict chain, not the scheduler, bounds the makespan (that
+        granularity trade-off is the paper's §2 discussion)."""
+        x, m = cloud(20000, 11)
+
+        def make(n):
+            t2 = bh.Octree(x, m, n_max=64)
+            return bh.build_graph(t2, n_task=256, nr_queues=n).sched
+
+        r1 = simulate(make(1), 1)
+        r32 = simulate(make(32), 32)
+        eff = r1.makespan / (32 * r32.makespan)
+        assert eff > 0.80, f"32-worker efficiency {eff:.3f}"
+
+    def test_schedule_valid(self):
+        x, m = cloud(3000, 12)
+        tree = bh.Octree(x, m, n_max=64)
+        g = bh.build_graph(tree, n_task=512, nr_queues=8)
+        res = simulate(g.sched, 8)
+        g.sched.validate_schedule(res.timeline)

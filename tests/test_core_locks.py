@@ -1,0 +1,149 @@
+"""Unit + property tests for the hierarchical lock/hold protocol (paper §3.2)."""
+
+import random
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.locks import SeqLockManager, ThreadedLockManager
+
+
+def chain_parents(depth):
+    # resource i's parent is i-1; root is 0
+    return [-1] + list(range(depth - 1))
+
+
+class TestBasicProtocol:
+    def test_lock_unlock_roundtrip(self):
+        lm = SeqLockManager([-1])
+        assert lm.try_lock(0)
+        assert lm.is_locked(0)
+        assert not lm.try_lock(0), "double lock must fail"
+        lm.unlock(0)
+        assert lm.all_free()
+
+    def test_locked_child_holds_ancestors(self):
+        lm = SeqLockManager(chain_parents(4))
+        assert lm.try_lock(3)
+        for a in (0, 1, 2):
+            assert lm.hold_count(a) == 1
+            assert not lm.try_lock(a), "held ancestor must not lock"
+        lm.unlock(3)
+        assert lm.all_free()
+
+    def test_locked_ancestor_blocks_descendant(self):
+        lm = SeqLockManager(chain_parents(4))
+        assert lm.try_lock(1)
+        assert not lm.try_lock(3), "descendant of locked resource must fail"
+        assert not lm.try_lock(2)
+        lm.unlock(1)
+        assert lm.try_lock(3)
+        lm.unlock(3)
+        assert lm.all_free()
+
+    def test_siblings_coexist(self):
+        # root 0 with children 1 and 2
+        lm = SeqLockManager([-1, 0, 0])
+        assert lm.try_lock(1)
+        assert lm.try_lock(2)
+        assert lm.hold_count(0) == 2
+        lm.unlock(1)
+        assert lm.hold_count(0) == 1
+        assert not lm.try_lock(0)
+        lm.unlock(2)
+        assert lm.try_lock(0)
+        lm.unlock(0)
+        assert lm.all_free()
+
+    def test_lock_all_is_atomic(self):
+        lm = SeqLockManager([-1, -1, -1])
+        assert lm.try_lock(1)
+        assert not lm.lock_all([0, 1, 2])
+        # failure must leave 0 unlocked (rollback)
+        assert not lm.is_locked(0) and not lm.is_locked(2)
+        lm.unlock(1)
+        assert lm.lock_all([0, 1, 2])
+        lm.unlock_all([0, 1, 2])
+        assert lm.all_free()
+
+
+@st.composite
+def resource_forest(draw):
+    n = draw(st.integers(min_value=1, max_value=30))
+    parents = [-1]
+    for i in range(1, n):
+        parents.append(draw(st.integers(min_value=-1, max_value=i - 1)))
+    return parents
+
+
+@settings(max_examples=200, deadline=None)
+@given(forest=resource_forest(), data=st.data())
+def test_property_lock_invariants(forest, data):
+    """After any sequence of lock/unlock ops: (1) a locked resource has no
+    locked strict ancestor/descendant; (2) hold counts equal the number of
+    locked resources strictly below; (3) full release restores all-free."""
+    lm = SeqLockManager(forest)
+    n = len(forest)
+    locked = set()
+    ops = data.draw(st.lists(st.integers(min_value=0, max_value=n - 1),
+                             max_size=60))
+    for r in ops:
+        if r in locked and data.draw(st.booleans()):
+            lm.unlock(r)
+            locked.discard(r)
+        else:
+            if lm.try_lock(r):
+                locked.add(r)
+
+    def ancestors(r):
+        out = []
+        u = forest[r]
+        while u != -1:
+            out.append(u)
+            u = forest[u]
+        return out
+
+    for r in locked:
+        for a in ancestors(r):
+            assert a not in locked, "ancestor and descendant both locked"
+    for a in range(n):
+        expect = sum(1 for r in locked for x in ancestors(r) if x == a)
+        assert lm.hold_count(a) == expect, f"hold count wrong at {a}"
+    for r in list(locked):
+        lm.unlock(r)
+    assert lm.all_free()
+
+
+def test_threaded_lock_exclusion_stress():
+    """N threads hammer overlapping lock sets; assert mutual exclusion and
+    conserved counters (the paper's CAS protocol, mutex-emulated)."""
+    parents = [-1, 0, 0, 1, 1, 2, 2]  # small tree
+    lm = ThreadedLockManager(parents)
+    in_crit = {r: 0 for r in range(len(parents))}
+    crit_mutex = threading.Lock()
+    errors = []
+    N_ITER = 300
+
+    def worker(seed):
+        rng = random.Random(seed)
+        try:
+            for _ in range(N_ITER):
+                r = rng.randrange(len(parents))
+                if lm.try_lock(r):
+                    with crit_mutex:
+                        in_crit[r] += 1
+                        assert in_crit[r] == 1, "mutual exclusion violated"
+                    with crit_mutex:
+                        in_crit[r] -= 1
+                    lm.unlock(r)
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert lm.all_free()

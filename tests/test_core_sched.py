@@ -1,0 +1,297 @@
+"""Scheduler behaviour tests: weights, queue, dependencies, conflicts,
+simulation, static rounds, threaded execution (paper §3–§4)."""
+
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    QSched,
+    SequentialExecutor,
+    TaskQueue,
+    conflict_rounds,
+    critical_path_length,
+    critical_path_weights,
+    simulate,
+    toposort,
+    validate_rounds,
+)
+
+
+def fig1_graph(nq=1, **kw):
+    """The paper's Figure 1 DAG: A->B->C, A->D->E(+B->E? no) ...
+    We encode: A unlocks B,D; B unlocks C; D,F unlock E; G unlocks F,H,I;
+    J unlocks K.  (Shape chosen to include a multi-dependency task E.)"""
+    s = QSched(nr_queues=nq, **kw)
+    ids = {name: s.addtask(type=0, data=name) for name in "ABCDEFGHIJK"}
+    for a, b in [("A", "B"), ("A", "D"), ("B", "C"), ("D", "E"), ("F", "E"),
+                 ("G", "F"), ("G", "H"), ("G", "I"), ("J", "K")]:
+        s.addunlock(ids[a], ids[b])
+    return s, ids
+
+
+class TestWeights:
+    def test_toposort_linear(self):
+        assert toposort(3, [[1], [2], []]) == [0, 1, 2]
+
+    def test_cycle_detection(self):
+        with pytest.raises(ValueError, match="cycle"):
+            toposort(2, [[1], [0]])
+
+    def test_paper_weight_recurrence(self):
+        # chain 0->1->2 with costs 1,2,3: weights 6,5,3
+        w, _ = critical_path_weights(3, [[1], [2], []], [1, 2, 3])
+        assert w == [6, 5, 3]
+
+    def test_weight_takes_max_branch(self):
+        # 0 unlocks 1 (cost 10) and 2 (cost 1)
+        w, _ = critical_path_weights(3, [[1, 2], [], []], [1, 10, 1])
+        assert w[0] == 11
+
+    def test_critical_path_length(self):
+        assert critical_path_length(3, [[1], [2], []], [1, 2, 3]) == 6
+
+
+class TestQueue:
+    def test_max_heap_priority_order(self):
+        weights = [5.0, 9.0, 1.0, 7.0]
+        q = TaskQueue(weights)
+        for t in range(4):
+            q.put(t)
+        got = [q.get(lambda _: True) for _ in range(4)]
+        assert got == [1, 3, 0, 2], "must pop in descending weight order"
+
+    def test_skips_unlockable(self):
+        weights = [5.0, 9.0]
+        q = TaskQueue(weights)
+        q.put(0)
+        q.put(1)
+        # task 1 (heavier) is conflicted; expect task 0
+        assert q.get(lambda t: t != 1) == 0
+        assert len(q) == 1
+
+    def test_heap_invariant_after_middle_removal(self):
+        import random
+        rng = random.Random(0)
+        weights = [rng.random() for _ in range(100)]
+        q = TaskQueue(weights)
+        for t in range(100):
+            q.put(t)
+        blocked = set(rng.sample(range(100), 50))
+        for _ in range(30):
+            q.get(lambda t: t not in blocked)
+            assert q.check_heap(), "heap invariant broken"
+
+
+class TestSchedulerProtocol:
+    def test_fig1_executes_all_in_valid_order(self):
+        s, ids = fig1_graph()
+        s.prepare()
+        seen = []
+        SequentialExecutor(s).run(lambda ty, d: seen.append(d))
+        assert sorted(seen) == sorted("ABCDEFGHIJK")
+        pos = {n: i for i, n in enumerate(seen)}
+        for a, b in [("A", "B"), ("B", "C"), ("D", "E"), ("F", "E"),
+                     ("G", "F"), ("J", "K")]:
+            assert pos[a] < pos[b]
+
+    def test_conflicts_serialize_but_any_order(self):
+        # Paper Fig 2: tasks F,H,I conflict via one resource.
+        s = QSched(nr_queues=2)
+        r = s.addres()
+        tids = [s.addtask(data=i, cost=1.0) for i in range(3)]
+        for t in tids:
+            s.addlock(t, r)
+        res = simulate(s, 2)
+        s.validate_schedule(res.timeline)
+        # serialized: makespan == 3 even with 2 workers
+        assert res.makespan == pytest.approx(3.0)
+
+    def test_hierarchical_conflicts(self):
+        # parent resource locked by task P; leaf tasks lock children
+        s = QSched(nr_queues=4)
+        root = s.addres()
+        kids = [s.addres(parent=root) for _ in range(4)]
+        tp = s.addtask(data="P", cost=1.0)
+        s.addlock(tp, root)
+        for k in kids:
+            t = s.addtask(data="L", cost=1.0)
+            s.addlock(t, k)
+        res = simulate(s, 4)
+        s.validate_schedule(res.timeline)
+        # P excludes all leaves: makespan >= 2 (1 for P + 1 round of leaves)
+        assert res.makespan == pytest.approx(2.0)
+
+    def test_virtual_tasks_not_executed(self):
+        from repro.core import FLAG_VIRTUAL
+        s = QSched()
+        a = s.addtask(data="A")
+        v = s.addtask(data="V", flags=FLAG_VIRTUAL)
+        b = s.addtask(data="B")
+        s.addunlock(a, v)
+        s.addunlock(v, b)
+        seen = []
+        SequentialExecutor(s).run(lambda ty, d: seen.append(d))
+        assert seen == ["A", "B"]
+
+    def test_rerun_same_sched(self):
+        s, _ = fig1_graph()
+        out1 = simulate(s, 2).makespan
+        out2 = simulate(s, 2).makespan  # qsched can be run more than once
+        assert out1 == out2
+
+    def test_critical_path_priority_beats_fifo(self):
+        """The paper's QR claim: critical-path weights schedule long chains
+        first.  Graph: one chain of length 8 + 14 independent unit tasks on
+        2 workers.  Weighted: makespan 8 (chain on one worker, fillers on
+        the other).  A weight-blind schedule can reach 8+ but typically 11+
+        when fillers run first; we check the weighted one is optimal."""
+        def build():
+            s = QSched(nr_queues=2)
+            prev = None
+            for i in range(8):
+                t = s.addtask(data=f"c{i}", cost=1.0)
+                if prev is not None:
+                    s.addunlock(prev, t)
+                prev = t
+            for i in range(14):
+                s.addtask(data=f"f{i}", cost=1.0)
+            return s
+        res = simulate(build(), 2)
+        assert res.makespan == pytest.approx(11.0, abs=3.1)
+        # lower bound: (8 + 14) / 2 = 11; critical path = 8
+        assert res.makespan >= 11.0 - 1e-9
+        assert res.makespan == pytest.approx(11.0), (
+            "critical-path priority should reach the optimal makespan")
+
+
+class TestWorkStealingAndAffinity:
+    def test_enqueue_prefers_owner_queue(self):
+        s = QSched(nr_queues=3, reown=False)
+        r = s.addres(owner=2)
+        t = s.addtask(cost=1.0)
+        s.addlock(t, r)
+        s.prepare()
+        s.start()
+        assert len(s.queues[2]) == 1 and len(s.queues[0]) == 0
+
+    def test_stealing_drains_imbalanced_queues(self):
+        # all resources owned by queue 0 — workers 1..3 must steal
+        s = QSched(nr_queues=4, reown=True)
+        for i in range(40):
+            r = s.addres(owner=0)
+            t = s.addtask(cost=1.0)
+            s.addlock(t, r)
+        res = simulate(s, 4)
+        assert res.makespan == pytest.approx(10.0)
+        assert s.steals > 0
+
+    def test_reown_migrates_ownership(self):
+        s = QSched(nr_queues=2, reown=True)
+        r = s.addres(owner=0)
+        t = s.addtask(cost=1.0)
+        s.addlock(t, r)
+        s.prepare()
+        s.start()
+        # worker 1 steals the task; resource must now be owned by queue 1
+        tid = s.gettask(1)
+        assert tid == t
+        assert s.resources[r].owner == 1
+
+
+class TestStaticRounds:
+    def test_rounds_respect_deps_and_conflicts(self):
+        s, _ = fig1_graph()
+        r = s.addres()
+        # make H and I conflict (paper Fig 2)
+        for name_tid in (7, 8):
+            s.addlock(name_tid, r)
+        rounds = conflict_rounds(s, nr_lanes=4)
+        validate_rounds(s, rounds)
+
+    def test_round_lane_counts(self):
+        s = QSched(nr_queues=1)
+        for i in range(16):
+            s.addtask(cost=1.0)
+        rounds = conflict_rounds(s, nr_lanes=4)
+        assert len(rounds) == 1
+        assert sum(len(v) for v in rounds[0].lanes.values()) == 16
+
+
+class TestThreadedExecutor:
+    def test_threaded_matches_sequential(self):
+        s, ids = fig1_graph(nq=4)
+        acc = []
+        lock = threading.Lock()
+
+        def fun(ty, d):
+            with lock:
+                acc.append(d)
+
+        s.run_threaded(4, fun)
+        assert sorted(acc) == sorted("ABCDEFGHIJK")
+
+    def test_threaded_conflict_exclusion(self):
+        """Conflicting tasks increment a shared counter non-atomically; with
+        correct conflict handling the result is exact."""
+        s = QSched(nr_queues=4, reown=False)
+        r = s.addres()
+        counter = {"v": 0}
+        N = 60
+        for i in range(N):
+            t = s.addtask(data=i, cost=1.0)
+            s.addlock(t, r)
+
+        def fun(ty, d):
+            v = counter["v"]
+            # deliberately racy read-modify-write; the conflict must serialize
+            for _ in range(50):
+                pass
+            counter["v"] = v + 1
+
+        s.run_threaded(4, fun)
+        assert counter["v"] == N
+
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(min_value=1, max_value=40))
+    nres = draw(st.integers(min_value=1, max_value=10))
+    edges = []
+    for j in range(1, n):
+        for i in draw(st.lists(st.integers(0, j - 1), max_size=3)):
+            edges.append((i, j))
+    locks = [draw(st.lists(st.integers(0, nres - 1), max_size=3, unique=True))
+             for _ in range(n)]
+    costs = [draw(st.floats(min_value=0.1, max_value=10.0,
+                            allow_nan=False)) for _ in range(n)]
+    return n, nres, edges, locks, costs
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_dag(), st.integers(min_value=1, max_value=8))
+def test_property_simulation_valid_and_bounded(dag, workers):
+    """For random DAGs with random conflicts: the simulator executes every
+    task exactly once, respects deps+conflicts, and the makespan is bounded
+    below by max(critical path, total/workers) and above by total cost."""
+    n, nres, edges, locks, costs = dag
+    s = QSched(nr_queues=workers)
+    for r in range(nres):
+        s.addres()
+    for i in range(n):
+        s.addtask(data=i, cost=costs[i])
+    for a, b in edges:
+        s.addunlock(a, b)
+    for i, ls in enumerate(locks):
+        for r in ls:
+            s.addlock(i, r)
+    res = simulate(s, workers)
+    s.validate_schedule(res.timeline)
+    total = sum(costs)
+    cp = critical_path_length(n, [s.tasks[i].unlocks for i in range(n)], costs)
+    assert res.makespan <= total + 1e-6
+    assert res.makespan >= max(cp, total / workers) - 1e-6
+    # rounds built from the same graph must also validate
+    rounds = conflict_rounds(s, nr_lanes=workers)
+    validate_rounds(s, rounds)

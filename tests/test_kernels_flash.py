@@ -1,0 +1,86 @@
+"""Flash-attention Pallas kernel: interpret-mode validation vs the plain
+softmax oracle and the model's chunked-jnp path, shape/dtype sweep +
+property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels.flash_attention import kernel, ops, ref
+
+
+def qkv(bh, sq, sk, hd, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    mk = lambda s: jnp.asarray(rng.standard_normal(s) * 0.5, dtype)
+    return mk((bh, sq, hd)), mk((bh, sk, hd)), mk((bh, sk, hd))
+
+
+@pytest.mark.parametrize("sq,sk,blocks", [(128, 128, (64, 64)),
+                                          (256, 256, (128, 64)),
+                                          (256, 256, (64, 128)),
+                                          (512, 512, (128, 128))])
+@pytest.mark.parametrize("causal", [True, False])
+def test_matches_ref(sq, sk, blocks, causal):
+    q, k, v = qkv(4, sq, sk, 64, seed=sq + sk)
+    got = kernel.flash_attention(q, k, v, causal=causal, block_q=blocks[0],
+                                 block_k=blocks[1], interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    q, k, v = qkv(2, 128, 128, 32, seed=1, dtype=dtype)
+    got = kernel.flash_attention(q, k, v, interpret=True)
+    want = ref.attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    atol=tol, rtol=tol)
+
+
+def test_bshd_wrapper_pads_ragged_seq():
+    b, s, h, hd = 2, 100, 3, 32      # s not a block multiple
+    rng = np.random.default_rng(3)
+    mk = lambda shape: jnp.asarray(rng.standard_normal(shape) * 0.5,
+                                   jnp.float32)
+    q, k, v = mk((b, s, h, hd)), mk((b, s, h, hd)), mk((b, s, h, hd))
+    got = ops.flash_attention_bshd(q, k, v, block_q=64, block_k=64)
+    want = ops.attention_ref_bshd(q, k, v)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-4)
+
+
+def test_matches_model_chunked_path():
+    """Same math as the model's pure-jnp online-softmax attention."""
+    from repro.models.layers import sdpa_chunked
+    b, s, h, hd = 2, 256, 4, 32
+    rng = np.random.default_rng(5)
+    mk = lambda: jnp.asarray(rng.standard_normal((b, s, h, hd)) * 0.5,
+                             jnp.float32)
+    q, k, v = mk(), mk(), mk()
+    got = ops.flash_attention_bshd(q, k, v, block_q=64, block_k=64)
+    want = sdpa_chunked(q, k, v, chunk=64)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.sampled_from([64, 128]), hd=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 999), causal=st.booleans())
+def test_property_flash(sq, hd, seed, causal):
+    q, k, v = qkv(2, sq, sq, hd, seed=seed)
+    got = kernel.flash_attention(q, k, v, causal=causal, block_q=64,
+                                 block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5, rtol=5e-4)
+
+
+def test_softmax_rows_sum_to_one_property():
+    """With v = all-ones, the output must be exactly ones (softmax weights
+    sum to 1 regardless of blocking)."""
+    q, k, _ = qkv(2, 128, 128, 32, seed=9)
+    v = jnp.ones((2, 128, 32), jnp.float32)
+    got = kernel.flash_attention(q, k, v, causal=True, interpret=True,
+                                 block_q=64, block_k=64)
+    assert_allclose(np.asarray(got), np.ones_like(got), atol=1e-5)

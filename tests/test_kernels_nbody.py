@@ -1,0 +1,77 @@
+"""N-body kernel validation: Pallas (interpret) vs jnp oracle, shape/dtype
+sweep + properties (paper §4.2 kernels)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels.nbody import kernel, ops, ref
+
+
+def cloud(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((3, n)), dtype=jnp.float32)
+    m = jnp.asarray(rng.random((n,)) + 0.1, dtype=jnp.float32)
+    return x, m
+
+
+@pytest.mark.parametrize("ni,nj", [(1, 1), (7, 5), (64, 33), (128, 128),
+                                   (200, 300), (256, 1000)])
+def test_pair_matches_ref(ni, nj):
+    xi, _ = cloud(ni, ni)
+    xj, mj = cloud(nj, nj + 1)
+    got = ops.acc_pair(xi, xj, mj, backend="pallas")
+    want = ref.acc_pair_ref(xi, xj, mj)
+    assert got.shape == (3, ni)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [2, 16, 100, 128, 257, 512])
+def test_self_matches_ref(n):
+    x, m = cloud(n, n + 7)
+    got = ops.acc_self(x, m, backend="pallas")
+    want = ref.acc_self_ref(x, m)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+
+def test_self_excludes_diagonal():
+    """A single particle feels no force from itself."""
+    x = jnp.zeros((3, 1), jnp.float32)
+    m = jnp.ones((1,), jnp.float32)
+    assert float(jnp.abs(ops.acc_self(x, m, backend="pallas")).max()) == 0.0
+
+
+def test_newton_third_law():
+    """Total momentum change of a closed system vanishes:
+    sum_i m_i a_i = 0 for the exact pairwise force."""
+    x, m = cloud(96, 3)
+    acc = ops.acc_self(x, m, backend="pallas")
+    p = np.asarray(acc) @ np.asarray(m)
+    assert np.abs(p).max() < 1e-2 * float(jnp.abs(acc).max() * jnp.sum(m))
+
+
+@settings(max_examples=20, deadline=None)
+@given(ni=st.integers(1, 64), nj=st.integers(1, 64), seed=st.integers(0, 999),
+       eps=st.floats(1e-4, 1e-1))
+def test_property_pair_kernel(ni, nj, seed, eps):
+    xi, _ = cloud(ni, seed)
+    xj, mj = cloud(nj, seed + 1)
+    got = ops.acc_pair(xi, xj, mj, eps=eps, backend="pallas")
+    want = ref.acc_pair_ref(xi, xj, mj, eps=eps)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 40), seed=st.integers(0, 999))
+def test_property_superposition(n, seed):
+    """Splitting the sources into two halves and summing equals one call —
+    force superposition (the invariant the task decomposition relies on)."""
+    xi, _ = cloud(8, seed + 2)
+    xj, mj = cloud(n, seed)
+    k = n // 2
+    whole = ops.acc_pair(xi, xj, mj, backend="pallas")
+    parts = (ops.acc_pair(xi, xj[:, :k], mj[:k], backend="pallas")
+             + ops.acc_pair(xi, xj[:, k:], mj[k:], backend="pallas"))
+    assert_allclose(np.asarray(whole), np.asarray(parts), rtol=1e-3, atol=2e-5)

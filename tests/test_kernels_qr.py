@@ -1,0 +1,111 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes/dtypes + hypothesis property tests (paper §4.1 kernels)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels.qr_tile import kernel, ref
+
+SIZES = [4, 8, 16, 32, 64]
+DTYPES = [jnp.float32]
+
+
+def rand(shape, seed, dtype=jnp.float32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       dtype=dtype)
+
+
+@pytest.mark.parametrize("b", SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_geqrf_matches_ref(b, dtype):
+    a = rand((b, b), b, dtype)
+    rv_k, tau_k, t_k = kernel.geqrf(a, interpret=True)
+    rv_r, tau_r, t_r = ref.geqrf_ref(a)
+    assert_allclose(np.asarray(rv_k), np.asarray(rv_r), atol=2e-5, rtol=1e-4)
+    assert_allclose(np.asarray(tau_k), np.asarray(tau_r), atol=2e-5, rtol=1e-4)
+    assert_allclose(np.asarray(t_k), np.asarray(t_r), atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b", SIZES)
+def test_geqrf_reconstructs(b):
+    """Q @ R == A and Q orthonormal (factorization-level invariant)."""
+    a = rand((b, b), 7 * b)
+    rv, tau, t = kernel.geqrf(a, interpret=True)
+    r = np.triu(np.asarray(rv))
+    v = np.tril(np.asarray(rv), -1) + np.eye(b)
+    q = np.eye(b) - v @ np.asarray(t) @ v.T
+    assert_allclose(q @ r, np.asarray(a), atol=5e-4)
+    assert_allclose(q.T @ q, np.eye(b), atol=5e-4)
+
+
+@pytest.mark.parametrize("b", SIZES)
+def test_tsqrf_matches_ref(b):
+    r0 = jnp.triu(rand((b, b), b + 1))
+    a = rand((b, b), b + 2)
+    outs_k = kernel.tsqrf(r0, a, interpret=True)
+    outs_r = ref.tsqrf_ref(r0, a)
+    for g, w in zip(outs_k, outs_r):
+        assert_allclose(np.asarray(g), np.asarray(w), atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b", SIZES)
+def test_tsqrf_reconstructs(b):
+    r0 = jnp.triu(rand((b, b), 3 * b))
+    a = rand((b, b), 3 * b + 1)
+    r1, v2, tau, t = kernel.tsqrf(r0, a, interpret=True)
+    vfull = np.vstack([np.eye(b), np.asarray(v2)])
+    q = np.eye(2 * b) - vfull @ np.asarray(t) @ vfull.T
+    rec = q @ np.vstack([np.asarray(r1), np.zeros((b, b), np.float32)])
+    assert_allclose(rec, np.vstack([np.asarray(r0), np.asarray(a)]), atol=5e-4)
+
+
+@pytest.mark.parametrize("b", SIZES)
+def test_apply_qt_matches_ref(b):
+    a = rand((b, b), b + 3)
+    rv, tau, t = ref.geqrf_ref(a)
+    c = rand((b, b), b + 4)
+    got = kernel.apply_qt(rv, t, c, interpret=True)
+    want = ref.apply_qt_ref(rv, t, c)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("b", SIZES)
+def test_apply_tsqt_matches_ref(b):
+    r0 = jnp.triu(rand((b, b), b + 5))
+    a = rand((b, b), b + 6)
+    _, v2, _, t = ref.tsqrf_ref(r0, a)
+    c1, c2 = rand((b, b), b + 7), rand((b, b), b + 8)
+    g1, g2 = kernel.apply_tsqt(v2, t, c1, c2, interpret=True)
+    w1, w2 = ref.apply_tsqt_ref(v2, t, c1, c2)
+    assert_allclose(np.asarray(g1), np.asarray(w1), atol=1e-5)
+    assert_allclose(np.asarray(g2), np.asarray(w2), atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**16),
+       scale=st.floats(0.01, 100.0))
+def test_property_geqrf_cholesky_identity(b, seed, scale):
+    """R^T R == A^T A for any well-conditioned input and scale (QR identity,
+    checked directly on the Pallas kernel)."""
+    a = rand((b, b), seed) * scale
+    rv, tau, t = kernel.geqrf(a, interpret=True)
+    r = np.triu(np.asarray(rv))
+    lhs, rhs = r.T @ r, np.asarray(a).T @ np.asarray(a)
+    norm = max(np.abs(rhs).max(), 1e-6)
+    assert np.abs(lhs - rhs).max() / norm < 5e-5
+
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.sampled_from([4, 8]), seed=st.integers(0, 2**16))
+def test_property_apply_preserves_norms(b, seed):
+    """Q^T is orthogonal: column norms of C are preserved by apply_qt."""
+    a = rand((b, b), seed)
+    rv, tau, t = kernel.geqrf(a, interpret=True)
+    c = rand((b, b), seed + 1)
+    got = kernel.apply_qt(rv, t, c, interpret=True)
+    assert_allclose(np.linalg.norm(np.asarray(got), axis=0),
+                    np.linalg.norm(np.asarray(c), axis=0), rtol=1e-4)

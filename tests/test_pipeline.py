@@ -1,0 +1,174 @@
+"""QuickSched pipeline synthesis (paper technique → LM training feature):
+schedule validity, 1F1B-equivalent bubble, numerical equivalence of the
+pipelined gradient, and the priority ablation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QSched, simulate
+from repro.pipeline import (build_pipeline_graph, bubble_fraction,
+                            one_f_one_b_bubble, synthesize_schedule)
+from repro.pipeline.exec import pipelined_value_and_grad
+
+
+class TestSynthesis:
+    @pytest.mark.parametrize("S,M", [(2, 4), (4, 8), (4, 16), (8, 32)])
+    def test_bubble_at_most_1f1b(self, S, M):
+        """Equal-cost fwd/bwd: the synthesized schedule must be at least as
+        tight as the analytic 1F1B bubble."""
+        ps = synthesize_schedule(S, M, fwd_cost=1.0, bwd_cost=1.0,
+                                 upd_cost=0.0)
+        measured = bubble_fraction(ps)
+        analytic = one_f_one_b_bubble(S, M)
+        assert measured <= analytic + 0.02, (measured, analytic)
+
+    def test_schedule_valid_and_complete(self):
+        sched, _ = build_pipeline_graph(4, 8)
+        res = simulate(sched, 4)
+        sched.validate_schedule(res.timeline)
+        # every lane serialized: no overlapping intervals per stage
+        ps = synthesize_schedule(4, 8)
+        for lane in ps.lanes:
+            for a, b in zip(lane, lane[1:]):
+                assert b[3] >= a[4] - 1e-9
+
+    @pytest.mark.parametrize("S,M,fc,bc", [(4, 16, 1.0, 1.0),
+                                            (4, 16, 1.0, 2.0),
+                                            (8, 32, 1.0, 2.0)])
+    def test_one_f_one_b_emerges(self, S, M, fc, bc):
+        """With the 1F1B stash profile (per-stage window W_k = S-k) the
+        greedy critical-path schedule reproduces the 1F1B bubble exactly —
+        1F1B EMERGES from weights + conflicts, it is not hard-coded."""
+        ps = synthesize_schedule(S, M, fwd_cost=fc, bwd_cost=bc,
+                                 upd_cost=0.0, per_stage_window=True)
+        assert bubble_fraction(ps) <= one_f_one_b_bubble(S, M) + 1e-6
+        # last stage strictly alternates F,B (window 1)
+        order = [k for k, _ in ps.order_for_stage(S - 1) if k != "U"]
+        assert all(a != b for a, b in zip(order, order[1:])), order
+
+    def test_in_flight_bound_respected(self):
+        """Peak activation stash per stage ≤ max_in_flight (the memory
+        guarantee 1F1B exists for)."""
+        S, M = 4, 16
+        ps = synthesize_schedule(S, M, 1.0, 1.0, 0.0, per_stage_window=True)
+        for k in range(S):
+            live = 0
+            peak = 0
+            for kind, m in ps.order_for_stage(k):
+                if kind == "F":
+                    live += 1
+                elif kind == "B":
+                    live -= 1
+                peak = max(peak, live)
+            assert peak <= S - k, f"stage {k} stash {peak} > {S - k}"
+        # without the throttle stage 0 stashes all M microbatches
+        ps0 = synthesize_schedule(S, M, 1.0, 1.0, 0.0)
+        live = peak = 0
+        for kind, m in ps0.order_for_stage(0):
+            live += 1 if kind == "F" else (-1 if kind == "B" else 0)
+            peak = max(peak, live)
+        assert peak == M
+
+    def test_priority_matters_vs_fifo(self):
+        """Ablation: zeroing the critical-path weights (cost=epsilon on
+        forwards) degrades or equals the schedule — weights are doing work."""
+        good = synthesize_schedule(6, 24)
+        sched, _ = build_pipeline_graph(6, 24)
+        for t in sched.tasks:
+            t.weight = 0.0  # will be overwritten by prepare(); force flat
+        sched.prepare()
+        for t in sched.tasks:
+            t.weight = 1.0
+        res = simulate(sched, 6)
+        sched.validate_schedule(res.timeline)
+        assert good.makespan <= res.makespan + 1e-9
+
+    def test_update_conflicts_with_accumulation(self):
+        """U(s) locks the grad buffer: it must never overlap any B(s,·)."""
+        sched, meta = build_pipeline_graph(3, 6)
+        res = simulate(sched, 3)
+        by_stage = {}
+        for ev in res.timeline:
+            data = sched.tasks[ev.tid].data
+            by_stage.setdefault(data[1], []).append((data[0], ev.t0, ev.t1))
+        for k, evs in by_stage.items():
+            u = [e for e in evs if e[0] == "U"]
+            bs = [e for e in evs if e[0] == "B"]
+            assert len(u) == 1
+            for _, bt0, bt1 in bs:
+                assert u[0][1] >= bt1 - 1e-9 or u[0][2] <= bt0 + 1e-9
+
+
+class TestNumericalEquivalence:
+    def test_pipelined_grad_equals_monolithic(self):
+        S, M = 4, 8
+        key = jax.random.PRNGKey(0)
+        dims = [16, 32, 32, 32, 8]
+        params = []
+        for k in range(S):
+            kk = jax.random.fold_in(key, k)
+            params.append({
+                "w": jax.random.normal(kk, (dims[k], dims[k + 1])) * 0.3,
+                "b": jnp.zeros((dims[k + 1],)),
+            })
+
+        def stage_fn(p, x):
+            return jnp.tanh(x @ p["w"] + p["b"])
+
+        def loss_fn(y, mb):
+            return jnp.mean((y - mb["y"]) ** 2)
+
+        micro = []
+        for m in range(M):
+            km = jax.random.fold_in(key, 100 + m)
+            micro.append({"x": jax.random.normal(km, (4, dims[0])),
+                          "y": jax.random.normal(
+                              jax.random.fold_in(km, 1), (4, dims[-1]))})
+
+        ps = synthesize_schedule(S, M)
+        loss_p, grads_p = pipelined_value_and_grad(
+            [stage_fn] * S, loss_fn, params, micro, ps)
+
+        def monolithic(params_list):
+            total = 0.0
+            for mb in micro:
+                h = mb["x"]
+                for p in params_list:
+                    h = stage_fn(p, h)
+                total = total + loss_fn(h, mb)
+            return total / M
+
+        loss_m, grads_m = jax.value_and_grad(monolithic)(params)
+        assert float(jnp.abs(loss_p - loss_m)) < 1e-6
+        for gp, gm in zip(grads_p, grads_m):
+            for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gm)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-6)
+
+    def test_grad_accumulation_order_irrelevant(self):
+        """Two different synthesized schedules (different cost ratios →
+        different B orders) give identical gradients — the conflict
+        model's whole point."""
+        S, M = 3, 6
+        key = jax.random.PRNGKey(1)
+        params = [{"w": jax.random.normal(jax.random.fold_in(key, k),
+                                          (8, 8)) * 0.3} for k in range(S)]
+
+        def stage_fn(p, x):
+            return jnp.tanh(x @ p["w"])
+
+        def loss_fn(y, mb):
+            return jnp.mean(y ** 2)
+
+        micro = [{"x": jax.random.normal(jax.random.fold_in(key, 10 + m),
+                                         (4, 8))} for m in range(M)]
+        g1 = pipelined_value_and_grad([stage_fn] * S, loss_fn, params, micro,
+                                      synthesize_schedule(S, M, 1.0, 2.0))[1]
+        g2 = pipelined_value_and_grad([stage_fn] * S, loss_fn, params, micro,
+                                      synthesize_schedule(S, M, 2.0, 1.0))[1]
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            # identical up to float summation order
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-8)

@@ -1,0 +1,134 @@
+"""Tiled-QR application tests (paper §4.1): task-graph structure, numerical
+correctness through the QuickSched executors, schedule properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.apps import qr
+from repro.core import conflict_rounds, simulate, validate_rounds
+
+
+def rand_matrix(n, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal((n, n)),
+                       dtype=jnp.float32)
+
+
+class TestGraphStructure:
+    def test_paper_task_and_resource_counts(self):
+        """2048² matrix, 64² tiles → 32×32 grid: the paper reports 11 440
+        tasks, 1 024 resources, 21 856 locks, 11 408 uses."""
+        c = qr.paper_counts(32, 32)
+        assert c["tasks"] == 11440
+        assert c["resources"] == 1024
+        assert c["locks"] == 21856
+        assert c["uses"] == 11408
+        # The paper reports 21 824 dependencies; the fully-deterministic
+        # table structure (which we implement) carries the per-tile
+        # previous-level chains explicitly:
+        assert c["deps"] == 32240
+
+    def test_task_type_counts(self):
+        s, _ = qr.make_qr_graph(32, 32)
+        by_type = {}
+        for t in s.tasks:
+            by_type[t.type] = by_type.get(t.type, 0) + 1
+        assert by_type[qr.T_GEQRF] == 32
+        assert by_type[qr.T_LARFT] == 496
+        assert by_type[qr.T_TSQRF] == 496
+        assert by_type[qr.T_SSRFT] == 10416
+
+    def test_geqrf_on_critical_path(self):
+        """Paper: 'the DGEQRF tasks all lie on the longest critical path'.
+        Each DGEQRF must have the maximum weight among ready tasks at its
+        level."""
+        s, _ = qr.make_qr_graph(8, 8)
+        s.prepare()
+        w = {t.tid: t.weight for t in s.tasks}
+        geqrf = [t for t in s.tasks if t.type == qr.T_GEQRF]
+        # DGEQRF(k) weight decreases with k and dominates its level
+        ws = [t.weight for t in sorted(geqrf, key=lambda t: t.data[2])]
+        assert all(a > b for a, b in zip(ws, ws[1:]))
+        top = max(w.values())
+        assert ws[0] == top, "DGEQRF(0) must head the critical path"
+
+    def test_rounds_valid(self):
+        s, _ = qr.make_qr_graph(6, 6)
+        rounds = conflict_rounds(s, nr_lanes=8)
+        validate_rounds(s, rounds)
+
+
+class TestNumerics:
+    @pytest.mark.parametrize("mode", ["sequential", "rounds"])
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    def test_qr_correct(self, mode, backend):
+        n, b = 96, 32
+        a = rand_matrix(n)
+        r, _ = qr.run_qr(a, tile=b, mode=mode, backend=backend, nr_queues=4)
+        r = np.asarray(r)
+        # R is upper triangular
+        assert np.abs(np.tril(r, -1)).max() < 1e-4
+        # Cholesky identity R^T R == A^T A
+        lhs, rhs = r.T @ r, np.asarray(a).T @ np.asarray(a)
+        assert np.abs(lhs - rhs).max() / np.abs(rhs).max() < 1e-4
+
+    def test_qr_matches_lapack_up_to_signs(self):
+        n, b = 64, 16
+        a = rand_matrix(n, seed=3)
+        r, _ = qr.run_qr(a, tile=b, mode="sequential", backend="ref")
+        r = np.asarray(r)
+        r_ref = np.asarray(jnp.linalg.qr(a, mode="r"))
+        sign = np.sign(np.diag(r)) * np.sign(np.diag(r_ref))
+        assert_allclose(r * sign[:, None], r_ref, atol=2e-3)
+
+    def test_modes_agree(self):
+        n, b = 64, 16
+        a = rand_matrix(n, seed=5)
+        r1, _ = qr.run_qr(a, tile=b, mode="sequential", backend="ref")
+        r2, _ = qr.run_qr(a, tile=b, mode="rounds", backend="ref", nr_queues=4)
+        assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-4)
+
+    def test_threaded_qr_correct(self):
+        """The pthread-pool analogue with real locks must produce a valid R
+        (exercises conflict exclusion on the diagonal/row tiles)."""
+        n, b = 64, 16
+        a = rand_matrix(n, seed=9)
+        r, _ = qr.run_qr(a, tile=b, mode="threaded", backend="ref",
+                         nr_queues=4)
+        r = np.asarray(r)
+        rhs = np.asarray(a).T @ np.asarray(a)
+        assert np.abs(r.T @ r - rhs).max() / np.abs(rhs).max() < 1e-4
+
+    def test_jit_traced_schedule(self):
+        """The sequential executor traces into a single jitted program."""
+        n, b = 64, 16
+        a = rand_matrix(n, seed=11)
+
+        @jax.jit
+        def qr_program(x):
+            r, _ = qr.run_qr(x, tile=b, mode="sequential", backend="ref")
+            return r
+
+        r = np.asarray(qr_program(a))
+        rhs = np.asarray(a).T @ np.asarray(a)
+        assert np.abs(r.T @ r - rhs).max() / np.abs(rhs).max() < 1e-4
+
+
+class TestScaling:
+    def test_simulated_strong_scaling(self):
+        """Scheduler-limited efficiency on the paper's 32×32 grid should be
+        high at 64 workers (paper: 73% incl. hardware effects)."""
+        def make(n):
+            s, _ = qr.make_qr_graph(32, 32, nr_queues=n)
+            return s
+        r1 = simulate(make(1), 1)
+        r64 = simulate(make(64), 64)
+        eff = r1.makespan / (64 * r64.makespan)
+        assert eff > 0.70, f"64-worker efficiency {eff:.2f} below paper's 73%"
+
+    def test_schedule_validates(self):
+        s, _ = qr.make_qr_graph(12, 12, nr_queues=8)
+        res = simulate(s, 8)
+        s.validate_schedule(res.timeline)
