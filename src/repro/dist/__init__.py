@@ -1,0 +1,29 @@
+"""Distributed substrate: sharding specs, activation-sharding constraints,
+compressed data-parallel all-reduce, and ring collective matmuls.
+
+Layout (DESIGN.md §Distributed):
+  act_sharding — logical ("dp"/"tp") activation constraints, no-op outside
+                 an ``activation_sharding`` context so model code stays
+                 mesh-agnostic;
+  sharding     — PartitionSpec derivation for parameter / optimizer /
+                 batch / KV-cache pytrees over the launch/mesh.py meshes;
+  compression  — int8 gradient all-reduce with error feedback (EF-SGD);
+  collective   — allgather/reduce-scatter matmuls as ``ppermute`` rings
+                 that overlap per-shard matmuls with neighbour exchange.
+"""
+
+from .act_sharding import activation_sharding, constrain
+from .collective import allgather_matmul, reducescatter_matmul
+from .compression import (compressed_psum, dequantize_int8,
+                          init_error_feedback, quantize_int8)
+from .sharding import (batch_pspecs, cache_pspecs, opt_pspecs, param_pspecs,
+                       shardings_for)
+
+__all__ = [
+    "activation_sharding", "constrain",
+    "param_pspecs", "opt_pspecs", "batch_pspecs", "cache_pspecs",
+    "shardings_for",
+    "quantize_int8", "dequantize_int8", "init_error_feedback",
+    "compressed_psum",
+    "allgather_matmul", "reducescatter_matmul",
+]

@@ -1,0 +1,102 @@
+"""Logical→physical activation-sharding constraints (DESIGN.md §Distributed).
+
+Model code annotates intermediates with *logical* axis names,
+
+    x = constrain(x, "dp", None, "tp", None)
+
+never with mesh axis names.  Outside an ``activation_sharding`` context the
+call returns ``x`` untouched, so the exact same model code runs unsharded in
+the CPU smoke tests.  Inside the context each logical name resolves to the
+mesh axes the launcher chose — e.g. ``"dp"`` → ``("pod", "data")`` on the
+multi-pod mesh, ``"tp"`` → ``"model"`` — and the entry becomes a
+``with_sharding_constraint`` against the ambient mesh:
+
+    with mesh, activation_sharding(("pod", "data"), "model"):
+        lowered = fn.lower(*args)        # launch/dryrun.py --act-shard
+
+Entries whose dimension does not divide evenly over the resolved axes are
+dropped (replicated) instead of failing the lower, so one annotation serves
+every (config × mesh) cell of the dry-run grid.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+
+Axes = Union[str, Tuple[str, ...], None]
+
+_MAPPING: ContextVar[Optional[Dict[str, Axes]]] = ContextVar(
+    "activation_sharding_mapping", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(dp: Axes = "data", tp: Axes = "model"):
+    """Activate ``constrain`` with the given logical→mesh axis mapping."""
+    token = _MAPPING.set({"dp": dp, "tp": tp})
+    try:
+        yield
+    finally:
+        _MAPPING.reset(token)
+
+
+def _ambient_mesh():
+    """The mesh installed by ``with mesh:`` around the current trace.
+
+    Resolved through the thread-resources env (private in jax 0.4.x, tried
+    under both historical homes).  If neither path exists on some future
+    jax, constrain degrades to a no-op — tests/test_sharding_specs.py
+    asserts against the lowered HLO that constraints actually land, so the
+    degradation is loud, not silent.
+    """
+    for locate in (
+        lambda: __import__("jax._src.mesh", fromlist=["thread_resources"])
+                .thread_resources,
+        lambda: __import__("jax.interpreters.pxla", fromlist=["pxla"])
+                .thread_resources,
+    ):
+        try:
+            m = locate().env.physical_mesh
+            return None if m.empty else m
+        except Exception:
+            continue
+    return None
+
+
+def _as_tuple(axes: Axes) -> Tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def constrain(x, *spec):
+    """``with_sharding_constraint`` over logical axes; no-op outside an
+    ``activation_sharding`` context or a ``with mesh:`` block.
+
+    ``spec`` entries are ``"dp"``, ``"tp"``, a raw mesh axis name, or
+    ``None`` (replicated); trailing dims may be omitted.
+    """
+    mapping = _MAPPING.get()
+    if mapping is None:
+        return x
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, entry in zip(x.shape, spec):
+        axes = mapping.get(entry, entry) if entry is not None else None
+        if axes is None:
+            resolved.append(None)
+            continue
+        names = _as_tuple(axes)
+        if any(a not in mesh.shape for a in names):
+            resolved.append(None)
+            continue
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        resolved.append(axes if dim % size == 0 else None)
+    pspec = jax.sharding.PartitionSpec(*resolved)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, pspec))

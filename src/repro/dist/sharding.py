@@ -1,0 +1,117 @@
+"""PartitionSpec derivation for params / optimizer / batch / cache pytrees
+(DESIGN.md §Distributed).
+
+One deterministic, shape-driven rule per pytree kind, over the meshes from
+``launch/mesh.py`` (single-pod ``("data", "model")``, multi-pod
+``("pod", "data", "model")``):
+
+  params    — last dim → "model" (tensor parallel), second-to-last dim →
+              "data" (FSDP); only the last two dims are ever candidates,
+              so the leading dim of rank-≥3 scanned stacks stays
+              replicated.  "pod" is pure data parallelism: parameters are
+              replicated across pods.
+  optimizer — the same rule on each state leaf.  Adam moments mirror the
+              parameter shapes, so they inherit the parameter specs by
+              construction (ZeRO: the FSDP axis shards them with the
+              weights); factored Adafactor statistics and the scalar step
+              counter get their own spec from their own shapes.
+  batch     — dim 0 (global batch) → the DP axes; everything else
+              replicated.
+  cache     — dim 1 (batch; dim 0 is the scanned layer/site stack) → the
+              DP axes; the KV-heads dim when present and divisible, else
+              the last (head/latent/channel) dim → "model".
+
+Every rule drops an axis whose size does not divide the dim, so any
+(config × shape × mesh) cell of the dry-run grid lowers without resharding
+errors — uneven cells degrade to replication, never to failure.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+
+def _dp_axes(mesh, multi_pod: bool):
+    """The data-parallel axes and their total size."""
+    names = ("pod", "data") if multi_pod and "pod" in mesh.shape else ("data",)
+    size = 1
+    for a in names:
+        size *= mesh.shape[a]
+    return (names if len(names) > 1 else names[0]), size
+
+
+def _weight_spec(shape: Tuple[int, ...], mesh) -> P:
+    spec = [None] * len(shape)
+    if len(shape) >= 1 and shape[-1] % mesh.shape["model"] == 0:
+        spec[-1] = "model"
+    if len(shape) >= 2 and shape[-2] % mesh.shape["data"] == 0:
+        spec[-2] = "data"
+    return P(*spec)
+
+
+def param_pspecs(params: Pytree, mesh, multi_pod: bool = False) -> Pytree:
+    """Specs for a parameter pytree (leaves: arrays or ShapeDtypeStructs)."""
+    del multi_pod  # parameters are pod-replicated; "pod" is pure DP
+    return jax.tree.map(lambda l: _weight_spec(l.shape, mesh), params)
+
+
+def opt_pspecs(pspecs: Pytree, opt_state: Pytree, mesh) -> Pytree:
+    """Specs for an optimizer-state pytree (``OptState`` or any pytree).
+
+    ``pspecs`` (the parameter specs) documents the contract: the rule is a
+    pure function of leaf shape, so exact-shape moment tensors (AdamW m/v)
+    receive identical specs to their parameters without any tree alignment.
+    """
+    del pspecs
+    return jax.tree.map(lambda l: _weight_spec(l.shape, mesh), opt_state)
+
+
+def batch_pspecs(batch: Pytree, mesh, multi_pod: bool = False) -> Pytree:
+    """Specs for model-input pytrees: dim 0 over the DP axes when even."""
+    dp, size = _dp_axes(mesh, multi_pod)
+
+    def rule(leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and leaf.shape[0] % size == 0:
+            spec[0] = dp
+        return P(*spec)
+
+    return jax.tree.map(rule, batch)
+
+
+def cache_pspecs(cache: Pytree, cfg, mesh, multi_pod: bool = False) -> Pytree:
+    """Specs for serving caches (KV / SSM state, see models/serving.py).
+
+    Every cache leaf is layer-stacked: dim 0 is the scanned stack (never
+    sharded), dim 1 the batch.  ``cfg`` selects the TP dim: the KV-heads
+    dim for attention caches when it divides "model", else the trailing
+    head/latent/channel dim.
+    """
+    dp, size = _dp_axes(mesh, multi_pod)
+    model = mesh.shape["model"]
+    kv_heads = {h for h in (cfg.n_kv_heads, cfg.n_heads) if h}
+
+    def rule(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % size == 0:
+            spec[1] = dp
+        if (len(shape) >= 4 and shape[-2] in kv_heads
+                and shape[-2] % model == 0):
+            spec[-2] = "model"
+        elif len(shape) >= 3 and shape[-1] % model == 0:
+            spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree.map(rule, cache)
+
+
+def shardings_for(pspecs: Pytree, mesh) -> Pytree:
+    """PartitionSpec pytree → NamedSharding pytree over ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)

@@ -209,7 +209,13 @@ def analyse_compiled(compiled) -> Dict[str, Any]:
             "output_bytes": int(ma.output_size_in_bytes),
             "temp_bytes": int(ma.temp_size_in_bytes),
             "alias_bytes": int(ma.alias_size_in_bytes),
-            "peak_bytes": int(ma.peak_memory_in_bytes),
+            # jaxlib < 0.5 has no peak_memory_in_bytes; args+outputs+temps
+            # minus aliased (donated) bytes bounds the live set — donated
+            # params/opt buffers must not be counted as both arg and output
+            "peak_bytes": int(getattr(
+                ma, "peak_memory_in_bytes",
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)),
         },
         "collectives": colls,
         "collective_operand_bytes_per_device": total_collective_bytes(colls),

@@ -1,0 +1,89 @@
+"""jax forward-compat shim, auto-imported by the ``site`` machinery for any
+interpreter launched with this directory on PYTHONPATH — i.e. every process
+under the tier-1 command (``PYTHONPATH=src python -m pytest ...``),
+*including* the 8-forced-host-device subprocesses of tests/test_dist.py and
+tests/test_dryrun_small.py, which is the point: those subprocesses do
+``from jax import shard_map`` before importing anything of ours.
+
+The pinned jax is 0.4.x, where ``shard_map`` still lives in
+``jax.experimental.shard_map`` and spells the replication check
+``check_rep`` (modern jax: ``jax.shard_map(..., check_vma=...)``).  A lazy
+meta-path hook patches the installed jax right after its import completes;
+on a jax new enough to export ``jax.shard_map`` natively the hook is a
+no-op.  Nothing is imported eagerly, so interpreter startup cost is zero
+for processes that never touch jax.
+"""
+
+import importlib.abc
+import importlib.util
+import sys
+
+
+def _patch_jax(jax_mod):
+    if getattr(jax_mod, "shard_map", None) is not None:
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  check_rep=True, check_vma=None, auto=frozenset()):
+        if check_vma is not None:
+            check_rep = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep,
+                          auto=auto)
+
+    jax_mod.shard_map = shard_map
+
+
+class _JaxCompatFinder(importlib.abc.MetaPathFinder):
+    def find_spec(self, fullname, path=None, target=None):
+        if fullname != "jax":
+            return None
+        try:
+            sys.meta_path.remove(self)      # run once; avoid re-entry below
+        except ValueError:
+            return None
+        spec = importlib.util.find_spec("jax")
+        if spec is None or spec.loader is None:
+            return spec
+        loader = spec.loader
+        orig_exec = loader.exec_module
+
+        def exec_module(module):
+            orig_exec(module)
+            try:
+                _patch_jax(module)
+            except Exception:
+                pass                         # never break jax import
+
+        loader.exec_module = exec_module
+        return spec
+
+
+def _chain_shadowed_sitecustomize():
+    """Being first on sys.path shadows any environment-level sitecustomize
+    (venv/conda/distro hooks); import whatever we shadowed so those still
+    run — this module must be additive, never a replacement."""
+    import importlib.machinery
+    import os
+    here = os.path.dirname(os.path.abspath(__file__))
+    paths = [p for p in sys.path
+             if os.path.abspath(p or os.getcwd()) != here]
+    spec = importlib.machinery.PathFinder.find_spec("sitecustomize", paths)
+    if spec is not None and spec.loader is not None:
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+
+
+if "jax" in sys.modules:
+    try:
+        _patch_jax(sys.modules["jax"])
+    except Exception:
+        pass
+else:
+    sys.meta_path.insert(0, _JaxCompatFinder())
+
+try:
+    _chain_shadowed_sitecustomize()
+except Exception:
+    pass

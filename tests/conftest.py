@@ -1,0 +1,32 @@
+"""Shared test configuration.
+
+* Optional-dependency gating: the five hypothesis-based suites are skipped
+  at collection (``pytest.importorskip`` semantics, applied conftest-wide
+  via ``collect_ignore``) when ``hypothesis`` is not installed, instead of
+  erroring the whole collection.  ``pip install -e .[dev]`` brings it in.
+* Subprocess environment: test_dist.py / test_dryrun_small.py re-launch
+  ``sys.executable`` for multi-device cells; make sure the inherited
+  PYTHONPATH carries ``src`` (absolute) so ``repro`` — and the
+  sitecustomize jax-compat shim — resolve in the children regardless of
+  how this pytest process itself found them.
+"""
+
+import importlib.util
+import os
+import pathlib
+
+_HYPOTHESIS_SUITES = [
+    "test_core_locks.py",
+    "test_core_sched.py",
+    "test_kernels_flash.py",
+    "test_kernels_nbody.py",
+    "test_kernels_qr.py",
+]
+
+collect_ignore = ([] if importlib.util.find_spec("hypothesis") is not None
+                  else list(_HYPOTHESIS_SUITES))
+
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+_paths = [p for p in os.environ.get("PYTHONPATH", "").split(os.pathsep) if p]
+if _SRC not in {os.path.abspath(p) for p in _paths}:
+    os.environ["PYTHONPATH"] = os.pathsep.join([_SRC] + _paths)
