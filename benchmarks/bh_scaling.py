@@ -16,14 +16,14 @@ import numpy as np
 from repro.apps import barneshut as bh
 from repro.core import simulate
 
-from .common import FULL, emit
+from .common import FULL, SMOKE, emit
 
 
 def main() -> None:
-    n = 1_000_000 if FULL else 100_000
+    n = 1_000_000 if FULL else (20_000 if SMOKE else 100_000)
     # the paper's granularity gives ≥8 stop cells per worker at 1M/5000;
     # keep the same cells-per-worker ratio at the reduced default size
-    n_max, n_task = 100, (5000 if FULL else 1000)
+    n_max, n_task = 100, (5000 if FULL else (500 if SMOKE else 1000))
     rng = np.random.default_rng(42)
     x = rng.random((n, 3))
     m = rng.random(n) + 0.5
@@ -49,7 +49,7 @@ def main() -> None:
 
     r1 = simulate(make(1), 1)
     t1 = r1.makespan
-    for nq in (1, 2, 4, 8, 16, 32, 64):
+    for nq in (1, 8, 32) if SMOKE else (1, 2, 4, 8, 16, 32, 64):
         t0 = time.perf_counter()
         r = simulate(make(nq), nq, overhead=t1 * 1e-7)
         sim_us = (time.perf_counter() - t0) * 1e6

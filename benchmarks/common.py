@@ -2,7 +2,9 @@
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows; ``derived``
 carries the figure-of-merit for that experiment (efficiency, ratio, ...).
-Set REPRO_FULL=1 for paper-size problems (1M particles / 2048² matrices).
+Set REPRO_FULL=1 for paper-size problems (1M particles / 2048² matrices);
+set REPRO_SMOKE=1 for CI-sized problems that exercise every perf path in
+seconds (the workflow runs these so hot-path regressions fail fast).
 """
 
 from __future__ import annotations
@@ -12,6 +14,7 @@ import time
 from typing import Callable
 
 FULL = os.environ.get("REPRO_FULL", "0") == "1"
+SMOKE = os.environ.get("REPRO_SMOKE", "0") == "1" and not FULL
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -13,7 +13,7 @@ import numpy as np
 from repro.apps import barneshut as bh
 from repro.core import QSched, simulate
 
-from .common import FULL, emit
+from .common import FULL, SMOKE, emit
 
 
 def chainified(g: bh.BHGraph, nr_queues: int) -> QSched:
@@ -72,11 +72,11 @@ def chainified(g: bh.BHGraph, nr_queues: int) -> QSched:
 
 
 def main() -> None:
-    n = 300_000 if FULL else 60_000
+    n = 300_000 if FULL else (15_000 if SMOKE else 60_000)
     rng = np.random.default_rng(7)
     x, m = rng.random((n, 3)), rng.random(n) + 0.5
     tree = bh.Octree(x, m, n_max=64)
-    for nq in (16, 32, 64):
+    for nq in (32,) if SMOKE else (16, 32, 64):
         g = bh.build_graph(tree, n_task=1000, nr_queues=nq)
         r_conf = simulate(g.sched, nq)
         tree2 = bh.Octree(x, m, n_max=64)

@@ -9,7 +9,7 @@ from __future__ import annotations
 import sys
 import traceback
 
-SECTIONS = ("qr_scaling", "bh_scaling", "priority_ablation",
+SECTIONS = ("sched_overhead", "qr_scaling", "bh_scaling", "priority_ablation",
             "conflict_ablation", "pipeline_bubble", "kernels", "roofline")
 
 

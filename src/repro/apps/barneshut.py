@@ -27,6 +27,16 @@ build time):  a non-neighbour pair (a,b) met during the walk contributes
 COM interactions (leaves(a) ← com(b), leaves(b) ← com(a)); a pair with at
 least one unsplit side contributes a direct block.  This is exact: every
 directed particle pair is covered exactly once (tested).
+
+Execution modes (``BHState.run`` / ``solve``):
+  * ``sequential`` — core SequentialExecutor drains the scheduler in
+    priority order (functional jnp accumulation, traceable);
+  * ``rounds``     — the shared ExecutionPlan lowering: bulk-synchronous
+    conflict-free rounds, the SPMD execution of the BH graph (matches
+    ``sequential`` up to float reassociation; tested to 1e-4);
+  * ``threaded``   — core ThreadedExecutor over a shared numpy buffer,
+    where the hierarchical resource locks are the only thing preventing
+    lost updates (the paper's conflict-exclusion claim, tested for real).
 """
 
 from __future__ import annotations
@@ -38,7 +48,8 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import QSched, SequentialExecutor, conflict_rounds
+from repro.core import (BatchSpec, QSched, SequentialExecutor,
+                        ThreadedExecutor, lower)
 from repro.kernels.nbody import ops
 from repro.kernels.nbody.ref import DEFAULT_EPS
 
@@ -384,63 +395,37 @@ class BHState:
         self._add_acc(rb, ops.acc_pair(self.x[:, rb], self.x[:, ra],
                                        self.m[ra], eps, be))
 
+    def batch_registry(self) -> Dict[int, BatchSpec]:
+        """BatchSpecs for the ExecutionPlan ``rounds`` mode.  Cell blocks
+        are ragged (per-cell particle counts differ), so every type runs
+        per-task; the plan still provides the bulk-synchronous round
+        structure (each round is one SPMD step, conflict-freedom proven at
+        lowering time) and the lane assignment."""
+        def one(ttype):
+            return BatchSpec(
+                run_one=lambda tid, data: self.exec_task(ttype, data, tid))
+
+        return {t: one(t) for t in (T_SELF, T_PAIR, T_PC, T_COM)}
+
     # -- drivers ---------------------------------------------------------------
     def run(self, mode: str = "sequential", nr_workers: int = 1) -> None:
+        s = self.g.sched
         if mode == "sequential":
-            self._run_sequential()
+            SequentialExecutor(s).run(self.exec_task, pass_tid=True)
+        elif mode == "rounds":
+            # conflict-free rounds via the shared ExecutionPlan lowering —
+            # the SPMD execution of the BH graph (accumulation order differs
+            # from `sequential` only by floating-point reassociation).
+            plan = lower(s, nr_lanes=max(nr_workers, 1))
+            plan.execute(s, self.batch_registry())
         elif mode == "threaded":
             assert self.accumulate == "numpy", (
                 "threaded mode requires accumulate='numpy'")
-            self._run_threaded(nr_workers)
+            # NOTE: no global lock — the resource locks acquired by gettask
+            # are what serialises overlapping writes.
+            ThreadedExecutor(s, nr_workers).run(self.exec_task, pass_tid=True)
         else:
             raise ValueError(mode)
-
-    def _run_sequential(self) -> None:
-        s = self.g.sched
-        s.start(threaded=False)
-        while True:
-            tid = s.gettask(0, block=False)
-            if tid is None:
-                if s.waiting <= 0:
-                    break
-                raise RuntimeError("deadlock in BH sequential run")
-            t = s.tasks[tid]
-            self.exec_task(t.type, t.data, tid)
-            s.done(tid)
-
-    def _run_threaded(self, nr_workers: int) -> None:
-        import threading
-        import time
-        s = self.g.sched
-        s.start(threaded=True)
-        errors: List[BaseException] = []
-
-        def worker(wid):
-            qid = wid % s.nr_queues
-            try:
-                while True:
-                    tid = s.gettask(qid, block=False)
-                    if tid is None:
-                        if s.waiting <= 0:
-                            return
-                        time.sleep(1e-5)
-                        continue
-                    t = s.tasks[tid]
-                    # NOTE: no global lock — the resource locks acquired by
-                    # gettask are what serialises overlapping writes.
-                    self.exec_task(t.type, t.data, tid)
-                    s.done(tid)
-            except BaseException as e:
-                errors.append(e)
-
-        threads = [threading.Thread(target=worker, args=(w,))
-                   for w in range(nr_workers)]
-        for th in threads:
-            th.start()
-        for th in threads:
-            th.join()
-        if errors:
-            raise errors[0]
 
 
 

@@ -16,27 +16,32 @@ a separate resource such that the scheduler can preferentially assign tasks
 using the same tiles to the same thread"), initially assigned to queues in
 column-major order.
 
+``make_qr_graph`` emits the whole level-k slab of tasks/deps/locks/uses as
+numpy index arrays through the scheduler's bulk API (``addtasks`` /
+``addunlocks`` / …) — the per-call reference builder it replaced is kept as
+``make_qr_graph_loop`` and the two are asserted stream-identical in
+``tests/test_plan.py``.
+
 Execution modes:
   * ``sequential`` — SequentialExecutor drains the scheduler in priority
     order while tracing the tile kernels; wrap in ``jax.jit`` for a single
     XLA program ordered by the QuickSched schedule.
-  * ``rounds``     — conflict-aware rounds (static_sched); within a round,
-    same-type tasks are *batched with vmap* over stacked tiles: on TPU each
-    round is one SPMD step and the vmap becomes the kernel grid.  This is
-    the TPU-native execution of the QuickSched schedule.
+  * ``rounds``     — the shared ExecutionPlan lowering: conflict-free
+    rounds whose same-type task groups are *batched with vmap* over stacked
+    tiles via the BatchSpec registry.  On TPU each round is one SPMD step
+    and the vmap becomes the kernel grid.
   * ``threaded``   — the paper's pthread pool over numpy tiles (host).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import QSched, SequentialExecutor, conflict_rounds
+from repro.core import BatchSpec, QSched, SequentialExecutor, lower
 from repro.kernels.qr_tile import ops
 
 T_GEQRF, T_LARFT, T_TSQRF, T_SSRFT = range(4)
@@ -46,16 +51,139 @@ TASK_NAMES = {T_GEQRF: "DGEQRF", T_LARFT: "DLARFT",
 COSTS = {T_GEQRF: 2.0, T_LARFT: 3.0, T_TSQRF: 3.0, T_SSRFT: 5.0}
 
 
-def make_qr_graph(mt: int, nt: int, nr_queues: int = 1,
-                  reown: bool = True) -> Tuple[QSched, Dict[Tuple[int, int], int]]:
-    """Build the QuickSched graph for an mt×nt tile grid."""
-    s = QSched(nr_queues=nr_queues, reown=reown)
+def _add_resources(s: QSched, mt: int, nt: int,
+                   nr_queues: int) -> Dict[Tuple[int, int], int]:
     ntiles = mt * nt
     rid: Dict[Tuple[int, int], int] = {}
     for j in range(nt):          # column-major initial queue assignment
         for i in range(mt):
             owner = (j * mt + i) * nr_queues // ntiles
             rid[i, j] = s.addres(owner=owner)
+    return rid
+
+
+def make_qr_graph(mt: int, nt: int, nr_queues: int = 1,
+                  reown: bool = True) -> Tuple[QSched, Dict[Tuple[int, int], int]]:
+    """Build the QuickSched graph for an mt×nt tile grid, one vectorized
+    level-k slab at a time (identical id/edge streams to the per-call
+    reference ``make_qr_graph_loop``)."""
+    s = QSched(nr_queues=nr_queues, reown=reown)
+    rid = _add_resources(s, mt, nt, nr_queues)
+    # tile (i,j) -> resource id, column-major creation order
+    last = np.full((mt, nt), -1, dtype=np.int64)   # tid grid, prev level
+
+    def res(i, j):               # rid[i, j] as index arithmetic
+        return j * mt + i
+
+    for k in range(min(mt, nt)):
+        nk = nt - k - 1          # DLARFT count (j = k+1..nt-1)
+        mk = mt - k - 1          # DTSQRF count (i = k+1..mt-1)
+        base = s.nr_tasks
+        js = np.arange(k + 1, nt, dtype=np.int64)
+        is_ = np.arange(k + 1, mt, dtype=np.int64)
+        g_tid = base
+        larft = base + 1 + np.arange(nk, dtype=np.int64)
+        blk = base + 1 + nk + np.arange(mk, dtype=np.int64)[:, None] * (1 + nk)
+        tsqrf = blk[:, 0]                                    # (mk,)
+        ssrft = blk + 1 + np.arange(nk, dtype=np.int64)[None, :]   # (mk, nk)
+
+        # tasks, creation order: GEQRF, LARFTs, then per i: TSQRF + SSRFTs
+        types = ([T_GEQRF] + [T_LARFT] * nk
+                 + ([T_TSQRF] + [T_SSRFT] * nk) * mk)
+        costv = ([COSTS[T_GEQRF]] + [COSTS[T_LARFT]] * nk
+                 + ([COSTS[T_TSQRF]] + [COSTS[T_SSRFT]] * nk) * mk)
+        js_l = js.tolist()
+        datas = ([(k, k, k)] + [(k, j, k) for j in js_l]
+                 + [d for i in range(k + 1, mt)
+                    for d in [(i, k, k)] + [(i, j, k) for j in js_l]])
+        s.addtasks(types, costv, datas)
+
+        # dependencies, creation order
+        dep_src, dep_dst = [], []
+        if k > 0:
+            dep_src.append(np.asarray([last[k, k]]))
+            dep_dst.append(np.asarray([g_tid]))
+        if nk:
+            if k > 0:            # per j: (GEQRF, larft_j), (last[k,j], larft_j)
+                dep_src.append(np.stack(
+                    [np.full(nk, g_tid, np.int64), last[k, k + 1:]],
+                    axis=1).ravel())
+                dep_dst.append(np.repeat(larft, 2))
+            else:
+                dep_src.append(np.full(nk, g_tid, np.int64))
+                dep_dst.append(larft)
+        if mk:
+            prev_col0 = np.concatenate(([g_tid], tsqrf[:-1]))  # cur[i-1, k]
+            prev_row = (np.vstack([larft[None, :], ssrft[:-1]])
+                        if nk else np.empty((mk, 0), np.int64))  # cur[i-1, j]
+            if k > 0:
+                # per i: [(cur[i-1,k], t), (last[i,k], t)]
+                #        + per j [(tsqrf_i, s), (cur[i-1,j], s), (last[i,j], s)]
+                a_src = np.stack([prev_col0, last[k + 1:, k]], axis=1)
+                b_src = np.stack([np.broadcast_to(tsqrf[:, None], (mk, nk)),
+                                  prev_row, last[k + 1:, k + 1:]], axis=2)
+                dep_src.append(np.concatenate(
+                    [a_src, b_src.reshape(mk, -1)], axis=1).ravel())
+                a_dst = np.stack([tsqrf, tsqrf], axis=1)
+                dep_dst.append(np.concatenate(
+                    [a_dst, np.repeat(ssrft, 3, axis=1)], axis=1).ravel())
+            else:
+                a_src = prev_col0[:, None]
+                b_src = np.stack([np.broadcast_to(tsqrf[:, None], (mk, nk)),
+                                  prev_row], axis=2)
+                dep_src.append(np.concatenate(
+                    [a_src, b_src.reshape(mk, -1)], axis=1).ravel())
+                dep_dst.append(np.concatenate(
+                    [tsqrf[:, None], np.repeat(ssrft, 2, axis=1)],
+                    axis=1).ravel())
+        if dep_src:
+            s.addunlocks(np.concatenate(dep_src), np.concatenate(dep_dst))
+
+        # locks: (GEQRF, (k,k)); per i: (t, (i,k)), (t, (k,k));
+        #        per j: (s, (i,j)), (s, (k,j))
+        lock_t = [np.asarray([g_tid])]
+        lock_r = [np.asarray([res(k, k)])]
+        if mk:
+            a_t = np.stack([tsqrf, tsqrf], axis=1)
+            a_r = np.stack([res(is_, k), np.full(mk, res(k, k), np.int64)],
+                           axis=1)
+            b_t = np.repeat(ssrft, 2, axis=1)
+            b_r = np.stack([res(is_[:, None], js[None, :]),
+                            np.broadcast_to(res(k, js)[None, :], (mk, nk))],
+                           axis=2).reshape(mk, -1)
+            lock_t.append(np.concatenate([a_t, b_t], axis=1).ravel())
+            lock_r.append(np.concatenate([a_r, b_r], axis=1).ravel())
+        s.addlocks(np.concatenate(lock_t), np.concatenate(lock_r))
+
+        # uses: per j: (larft_j, (k,k)), (larft_j, (k,j));
+        #       per i,j: (ssrft_ij, (i,k))
+        if nk:
+            use_t = [np.repeat(larft, 2)]
+            use_r = [np.stack([np.full(nk, res(k, k), np.int64), res(k, js)],
+                              axis=1).ravel()]
+            if mk:
+                use_t.append(ssrft.ravel())
+                use_r.append(np.repeat(res(is_, k), nk))
+            s.adduses(np.concatenate(use_t), np.concatenate(use_r))
+
+        # fold this level's tids into the grid for level k+1
+        last[k, k] = g_tid
+        if nk:
+            last[k, k + 1:] = larft
+        if mk:
+            last[k + 1:, k] = tsqrf
+            if nk:
+                last[k + 1:, k + 1:] = ssrft
+    return s, rid
+
+
+def make_qr_graph_loop(mt: int, nt: int, nr_queues: int = 1,
+                       reown: bool = True) -> Tuple[QSched, Dict[Tuple[int, int], int]]:
+    """Reference per-call builder (paper Fig 14 shape) — kept as the oracle
+    for the vectorized ``make_qr_graph`` (asserted stream-identical in
+    tests) and as readable documentation of the dependency table."""
+    s = QSched(nr_queues=nr_queues, reown=reown)
+    rid = _add_resources(s, mt, nt, nr_queues)
     tid: Dict[Tuple[int, int], int] = {}
     for k in range(min(mt, nt)):
         t = s.addtask(T_GEQRF, data=(k, k, k), cost=COSTS[T_GEQRF])
@@ -148,6 +276,43 @@ class _TileState:
         else:
             raise ValueError(f"unknown task type {ttype}")
 
+    def batch_registry(self):
+        """BatchSpecs for the ExecutionPlan: LARFT/SSRFT groups stack their
+        tiles and run one vmapped kernel; GEQRF is singular per round and
+        TSQRF batches would mix conflicting same-column updates, so both
+        stay per-task."""
+        tl, be = self.tiles, self.backend
+
+        def larft_batch(tids, datas):
+            kk = jnp.stack([tl[k, k] for (k, j, _) in datas])
+            tt = jnp.stack([self.t_diag[k] for (k, j, _) in datas])
+            cc = jnp.stack([tl[k, j] for (k, j, _) in datas])
+            out = jax.vmap(
+                lambda a, b, c: ops.apply_qt(a, b, c, backend=be))(kk, tt, cc)
+            for (k, j, _), o in zip(datas, out):
+                tl[k, j] = o
+
+        def ssrft_batch(tids, datas):
+            v2 = jnp.stack([tl[i, k] for (i, j, k) in datas])
+            tt = jnp.stack([self.t_ts[i, k] for (i, j, k) in datas])
+            c1 = jnp.stack([tl[k, j] for (i, j, k) in datas])
+            c2 = jnp.stack([tl[i, j] for (i, j, k) in datas])
+            o1, o2 = jax.vmap(lambda a, b, c, d: ops.apply_tsqt(
+                a, b, c, d, backend=be))(v2, tt, c1, c2)
+            for (i, j, k), x1, x2 in zip(datas, o1, o2):
+                tl[k, j] = x1
+                tl[i, j] = x2
+
+        def one(ttype):
+            return lambda tid, d: self.exec_task(ttype, d)
+
+        return {
+            T_GEQRF: BatchSpec(run_one=one(T_GEQRF)),
+            T_LARFT: BatchSpec(run_one=one(T_LARFT), run_batch=larft_batch),
+            T_TSQRF: BatchSpec(run_one=one(T_TSQRF)),
+            T_SSRFT: BatchSpec(run_one=one(T_SSRFT), run_batch=ssrft_batch),
+        }
+
 
 def run_qr(a: jnp.ndarray, tile: int = 32, mode: str = "sequential",
            backend: str = "pallas", nr_queues: int = 1):
@@ -159,50 +324,14 @@ def run_qr(a: jnp.ndarray, tile: int = 32, mode: str = "sequential",
     if mode == "sequential":
         SequentialExecutor(sched).run(state.exec_task)
     elif mode == "rounds":
-        for rnd in conflict_rounds(sched, nr_lanes=max(nr_queues, 1)):
-            _run_round_batched(state, sched, rnd)
+        plan = lower(sched, nr_lanes=max(nr_queues, 1))
+        plan.execute(sched, state.batch_registry())
     elif mode == "threaded":
         sched.run_threaded(nr_queues, state.exec_task)
     else:
         raise ValueError(mode)
     r = _assemble_r(state.tiles, mt, nt, tile, a.dtype)
     return r, sched
-
-
-def _run_round_batched(state: _TileState, sched: QSched, rnd) -> None:
-    """Execute one conflict-free round, batching same-type tasks with vmap
-    (stack tiles → one batched kernel call → scatter back)."""
-    by_type: Dict[int, list] = {}
-    for tid in rnd.tasks:
-        t = sched.tasks[tid]
-        by_type.setdefault(t.type, []).append(t.data)
-    tl = state.tiles
-    for ttype, datas in by_type.items():
-        if ttype == T_GEQRF or len(datas) == 1:
-            for d in datas:
-                state.exec_task(ttype, d)
-            continue
-        if ttype == T_LARFT:
-            kk = jnp.stack([tl[k, k] for (k, j, _) in datas])
-            tt = jnp.stack([state.t_diag[k] for (k, j, _) in datas])
-            cc = jnp.stack([tl[k, j] for (k, j, _) in datas])
-            out = jax.vmap(lambda a, b, c: ops.apply_qt(a, b, c,
-                                                        backend=state.backend))(kk, tt, cc)
-            for (k, j, _), o in zip(datas, out):
-                tl[k, j] = o
-        elif ttype == T_TSQRF:
-            for d in datas:  # same-column TSQRFs conflict; cross-column batch
-                state.exec_task(ttype, d)
-        elif ttype == T_SSRFT:
-            v2 = jnp.stack([tl[i, k] for (i, j, k) in datas])
-            tt = jnp.stack([state.t_ts[i, k] for (i, j, k) in datas])
-            c1 = jnp.stack([tl[k, j] for (i, j, k) in datas])
-            c2 = jnp.stack([tl[i, j] for (i, j, k) in datas])
-            o1, o2 = jax.vmap(lambda a, b, c, d: ops.apply_tsqt(
-                a, b, c, d, backend=state.backend))(v2, tt, c1, c2)
-            for (i, j, k), x1, x2 in zip(datas, o1, o2):
-                tl[k, j] = x1
-                tl[i, j] = x2
 
 
 def paper_counts(mt: int = 32, nt: int = 32):

@@ -14,7 +14,10 @@ from .graph import (
     Resource,
     Task,
 )
+from .arrays import CompiledGraph
 from .locks import SeqLockManager, ThreadedLockManager, make_lock_manager
+from .plan import (BatchSpec, ExecutionPlan, PlanRound, TypedBatch,
+                   clear_plan_cache, lower, plan_cache_info)
 from .queue import TaskQueue
 from .simulator import SimResult, TimelineEvent, scaling_curve, simulate
 from .static_sched import Round, conflict_rounds, list_schedule, validate_rounds
@@ -22,11 +25,13 @@ from .weights import critical_path_length, critical_path_weights, toposort
 from .executors import SequentialExecutor, ThreadedExecutor
 
 __all__ = [
-    "QSched", "Task", "Resource", "TaskQueue",
+    "QSched", "Task", "Resource", "TaskQueue", "CompiledGraph",
     "FLAG_NONE", "FLAG_VIRTUAL", "TASK_NONE", "RES_NONE", "OWNER_NONE",
     "SeqLockManager", "ThreadedLockManager", "make_lock_manager",
     "SimResult", "TimelineEvent", "simulate", "scaling_curve",
     "Round", "conflict_rounds", "validate_rounds", "list_schedule",
+    "BatchSpec", "ExecutionPlan", "PlanRound", "TypedBatch",
+    "lower", "clear_plan_cache", "plan_cache_info",
     "toposort", "critical_path_weights", "critical_path_length",
     "SequentialExecutor", "ThreadedExecutor",
 ]

@@ -7,6 +7,9 @@
 * ``SequentialExecutor`` — a single worker draining the scheduler in
   priority order; used to trace task bodies into a single jitted function
   (tasks execute as jnp ops on traced values).
+
+Both accept ``pass_tid=True`` to call ``fun(type, data, tid)`` for task
+bodies that key side tables by task id (Barnes-Hut's per-task work lists).
 """
 
 from __future__ import annotations
@@ -24,9 +27,11 @@ class ThreadedExecutor:
         self.nr_threads = nr_threads
         self.errors: List[BaseException] = []
 
-    def _worker(self, wid: int, fun: Callable[[int, Any], None]) -> None:
+    def _worker(self, wid: int, fun: Callable[..., None],
+                pass_tid: bool) -> None:
         s = self.sched
         qid = wid % s.nr_queues
+        ttype, tdata, tflags = s._ttype, s._tdata, s._tflags
         try:
             while True:
                 tid = s.gettask(qid, block=False)
@@ -35,17 +40,20 @@ class ThreadedExecutor:
                         return
                     time.sleep(1e-5)  # qsched_flag_yield analogue
                     continue
-                t = s.tasks[tid]
-                if not (t.flags & FLAG_VIRTUAL):
-                    fun(t.type, t.data)
+                if not tflags[tid] & FLAG_VIRTUAL:
+                    if pass_tid:
+                        fun(ttype[tid], tdata[tid], tid)
+                    else:
+                        fun(ttype[tid], tdata[tid])
                 s.done(tid)
         except BaseException as e:  # surface worker errors to the caller
             self.errors.append(e)
 
-    def run(self, fun: Callable[[int, Any], None]) -> None:
+    def run(self, fun: Callable[..., None], pass_tid: bool = False) -> None:
         self.sched.start(threaded=True)
         threads = [
-            threading.Thread(target=self._worker, args=(w, fun), daemon=True)
+            threading.Thread(target=self._worker, args=(w, fun, pass_tid),
+                             daemon=True)
             for w in range(self.nr_threads)
         ]
         for th in threads:
@@ -69,9 +77,11 @@ class SequentialExecutor:
     def __init__(self, sched: QSched):
         self.sched = sched
 
-    def run(self, fun: Callable[[int, Any], None]) -> List[int]:
+    def run(self, fun: Callable[..., None],
+            pass_tid: bool = False) -> List[int]:
         s = self.sched
         s.start(threaded=False)
+        ttype, tdata, tflags = s._ttype, s._tdata, s._tflags
         order: List[int] = []
         while True:
             tid = s.gettask(0, block=False)
@@ -80,9 +90,11 @@ class SequentialExecutor:
                     break
                 raise RuntimeError(
                     f"no runnable task with {s.waiting} waiting (deadlock)")
-            t = s.tasks[tid]
-            if not (t.flags & FLAG_VIRTUAL):
-                fun(t.type, t.data)
+            if not tflags[tid] & FLAG_VIRTUAL:
+                if pass_tid:
+                    fun(ttype[tid], tdata[tid], tid)
+                else:
+                    fun(ttype[tid], tdata[tid])
             order.append(tid)
             s.done(tid)
         return order

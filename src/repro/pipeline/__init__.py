@@ -1,6 +1,6 @@
 from .qsched_pipeline import (PipelineSchedule, build_pipeline_graph,
-                              bubble_fraction, one_f_one_b_bubble,
-                              synthesize_schedule)
+                              bubble_fraction, lower_pipeline_plan,
+                              one_f_one_b_bubble, synthesize_schedule)
 
 __all__ = ["build_pipeline_graph", "synthesize_schedule", "PipelineSchedule",
-           "bubble_fraction", "one_f_one_b_bubble"]
+           "bubble_fraction", "one_f_one_b_bubble", "lower_pipeline_plan"]

@@ -1,11 +1,20 @@
 """Numerical executor for a synthesized pipeline schedule.
 
-Runs the (stage, microbatch) tasks in the schedule's global time order —
-forwards store VJP closures, backwards propagate cotangents and accumulate
-per-stage gradients *in whatever order the conflict resolution chose* (the
-accumulation is order-independent, which is exactly why it is modelled as a
-QuickSched conflict and not a dependency chain).  The result must equal the
+Runs the (stage, microbatch) tasks in schedule order — forwards store VJP
+closures, backwards propagate cotangents and accumulate per-stage gradients
+*in whatever order the conflict resolution chose* (the accumulation is
+order-independent, which is exactly why it is modelled as a QuickSched
+conflict and not a dependency chain).  The result must equal the
 single-shot ``jax.grad`` of the unpipelined loss (tested).
+
+Two drivers share the same task bodies (``_PipeRunner``):
+
+* ``pipelined_value_and_grad``       — replays a discrete-event
+  ``PipelineSchedule`` in global time order;
+* ``pipelined_value_and_grad_plan``  — executes the shared ExecutionPlan
+  lowering (``lower_pipeline_plan``) through a BatchSpec registry, one
+  conflict-free round per bulk-synchronous pipeline step.  Repeated calls
+  with the same (S, M, costs) hit the plan cache and skip re-lowering.
 """
 
 from __future__ import annotations
@@ -15,7 +24,52 @@ from typing import Any, Callable, Dict, List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .qsched_pipeline import PipelineSchedule
+from repro.core import BatchSpec
+
+from .qsched_pipeline import B, F, U, PipelineSchedule, lower_pipeline_plan
+
+
+class _PipeRunner:
+    """Holds pipeline state and executes F/B task bodies by (stage, micro)."""
+
+    def __init__(self, stage_fns: Sequence[Callable], loss_fn: Callable,
+                 stage_params: Sequence[Any], microbatches: Sequence[Any]):
+        self.stage_fns = stage_fns
+        self.loss_fn = loss_fn
+        self.params = stage_params
+        self.micro = microbatches
+        self.S = len(stage_fns)
+        self.M = len(microbatches)
+        self.acts: Dict[Tuple[int, int], Any] = {}   # (stage, micro) -> input
+        self.vjps: Dict[Tuple[int, int], Any] = {}
+        self.cots: Dict[Tuple[int, int], Any] = {}   # cotangent flowing back
+        self.grads: List[Any] = [jax.tree.map(jnp.zeros_like, p)
+                                 for p in stage_params]
+        self.losses: List[Any] = []
+
+    def forward(self, k: int, m: int) -> None:
+        x = self.micro[m]["x"] if k == 0 else self.acts[k, m]
+        y, vjp = jax.vjp(self.stage_fns[k], self.params[k], x)
+        self.vjps[k, m] = vjp
+        if k + 1 < self.S:
+            self.acts[k + 1, m] = y
+        else:
+            loss, loss_vjp = jax.vjp(
+                lambda yy: self.loss_fn(yy, self.micro[m]), y)
+            self.losses.append(loss)
+            self.cots[k, m] = loss_vjp(jnp.ones_like(loss))[0]
+
+    def backward(self, k: int, m: int) -> None:
+        gp, gx = self.vjps[k, m](self.cots[k, m])
+        # conflict-protected accumulation (any order)
+        self.grads[k] = jax.tree.map(jnp.add, self.grads[k], gp)
+        if k > 0:
+            self.cots[k - 1, m] = gx
+
+    def finish(self) -> Tuple[jnp.ndarray, List[Any]]:
+        loss = sum(self.losses) / self.M
+        grads = [jax.tree.map(lambda g: g / self.M, gk) for gk in self.grads]
+        return loss, grads
 
 
 def pipelined_value_and_grad(
@@ -30,6 +84,7 @@ def pipelined_value_and_grad(
     stage averaged over microbatches)."""
     S, M = schedule.n_stages, schedule.n_micro
     assert len(stage_fns) == S and len(microbatches) == M
+    runner = _PipeRunner(stage_fns, loss_fn, stage_params, microbatches)
 
     # merge lanes into global time order (the schedule's interleaving)
     events = []
@@ -37,33 +92,35 @@ def pipelined_value_and_grad(
         events.extend(lane)
     events.sort(key=lambda e: (e[3], e[1]))
 
-    acts: Dict[Tuple[int, int], Any] = {}      # (stage, micro) -> input
-    vjps: Dict[Tuple[int, int], Any] = {}
-    cots: Dict[Tuple[int, int], Any] = {}      # cotangent flowing backward
-    grads: List[Any] = [jax.tree.map(jnp.zeros_like, p)
-                        for p in stage_params]
-    losses = []
-
     for kind, k, m, t0, t1 in events:
         if kind == "F":
-            x = microbatches[m]["x"] if k == 0 else acts[k, m]
-            y, vjp = jax.vjp(stage_fns[k], stage_params[k], x)
-            vjps[k, m] = vjp
-            if k + 1 < S:
-                acts[k + 1, m] = y
-            else:
-                loss, loss_vjp = jax.vjp(
-                    lambda yy: loss_fn(yy, microbatches[m]), y)
-                losses.append(loss)
-                cots[k, m] = loss_vjp(jnp.ones_like(loss))[0]
+            runner.forward(k, m)
         elif kind == "B":
-            gp, gx = vjps[k, m](cots[k, m])
-            # conflict-protected accumulation (any order)
-            grads[k] = jax.tree.map(jnp.add, grads[k], gp)
-            if k > 0:
-                cots[k - 1, m] = gx
+            runner.backward(k, m)
         # "U" tasks would apply the optimizer; the caller does that.
+    return runner.finish()
 
-    loss = sum(losses) / M
-    grads = [jax.tree.map(lambda g: g / M, gk) for gk in grads]
-    return loss, grads
+
+def pipelined_value_and_grad_plan(
+        stage_fns: Sequence[Callable],
+        loss_fn: Callable,
+        stage_params: Sequence[Any],
+        microbatches: Sequence[Any],
+        fwd_cost: float = 1.0,
+        bwd_cost: float = 2.0,
+        upd_cost: float = 0.5,
+        per_stage_window: bool = True,
+) -> Tuple[jnp.ndarray, List[Any]]:
+    """Same computation, driven by the shared ExecutionPlan lowering: each
+    plan round is one bulk-synchronous pipeline step."""
+    runner = _PipeRunner(stage_fns, loss_fn, stage_params, microbatches)
+    sched, _meta, plan = lower_pipeline_plan(
+        runner.S, runner.M, fwd_cost, bwd_cost, upd_cost,
+        per_stage_window=per_stage_window)
+    registry = {
+        F: BatchSpec(run_one=lambda tid, d: runner.forward(d[1], d[2])),
+        B: BatchSpec(run_one=lambda tid, d: runner.backward(d[1], d[2])),
+        U: BatchSpec(run_one=lambda tid, d: None),  # caller applies optimizer
+    }
+    plan.execute(sched, registry)
+    return runner.finish()

@@ -28,7 +28,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
-from repro.core import QSched, simulate
+from repro.core import ExecutionPlan, QSched, lower, simulate
 
 F, B, U = 0, 1, 2
 KIND = {F: "F", B: "B", U: "U"}
@@ -110,6 +110,23 @@ def synthesize_schedule(n_stages: int, n_micro: int, fwd_cost: float = 1.0,
         lane.sort(key=lambda e: e[3])
     work = sum(ev.t1 - ev.t0 for ev in res.timeline)
     return PipelineSchedule(n_stages, n_micro, res.makespan, lanes, work)
+
+
+def lower_pipeline_plan(n_stages: int, n_micro: int, fwd_cost: float = 1.0,
+                        bwd_cost: float = 2.0, upd_cost: float = 0.5,
+                        max_in_flight: int = 0,
+                        per_stage_window: bool = False
+                        ) -> Tuple[QSched, Dict, ExecutionPlan]:
+    """Lower the pipeline graph through the shared ExecutionPlan layer: each
+    round is one bulk-synchronous pipeline step (per-stage conflicts cap a
+    round at one task per stage; grad-buffer conflicts keep accumulation and
+    the update exclusive).  The plan cache means a trainer loop rebuilding
+    the same (S, M, costs) graph every step skips re-lowering."""
+    sched, meta = build_pipeline_graph(n_stages, n_micro, fwd_cost, bwd_cost,
+                                       upd_cost, max_in_flight,
+                                       per_stage_window)
+    plan = lower(sched, nr_lanes=n_stages)
+    return sched, meta, plan
 
 
 def bubble_fraction(ps: PipelineSchedule) -> float:

@@ -1,0 +1,408 @@
+"""Array-native core + ExecutionPlan lowering tests (the multi-layer
+refactor): array-backed ``prepare()`` vs the reference recurrence, plan
+round validity on random conflicting/hierarchical graphs, the level
+shortcut vs the greedy constructor, plan caching, batch-spec dispatch, the
+vectorized QR builder vs its per-call oracle, BH ``rounds`` vs
+``sequential``, and the construction-API validation."""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.apps import barneshut as bh
+from repro.apps import qr
+from repro.core import (QSched, conflict_rounds, critical_path_weights,
+                        lower, validate_rounds, BatchSpec, clear_plan_cache)
+import repro.core.plan as plan_mod
+from repro.pipeline.exec import pipelined_value_and_grad_plan
+
+
+def random_sched(rng, n_max=40, nres_max=10, hierarchical=False,
+                 lock_p=0.7):
+    n = rng.randint(1, n_max)
+    nres = rng.randint(1, nres_max)
+    s = QSched(nr_queues=rng.randint(1, 4))
+    parents = []
+    for r in range(nres):
+        parent = rng.randrange(-1, r) if (hierarchical and r) else -1
+        parents.append(parent)
+        s.addres(owner=rng.randrange(-1, 4), parent=parent)
+
+    def chain(r):
+        out = {r}
+        while parents[r] != -1:
+            r = parents[r]
+            out.add(r)
+        return out
+
+    costs = [rng.uniform(0.1, 10.0) for _ in range(n)]
+    for i in range(n):
+        s.addtask(data=i, cost=costs[i])
+    for j in range(1, n):
+        for i in rng.sample(range(j), min(j, rng.randint(0, 3))):
+            s.addunlock(i, j)
+    for i in range(n):
+        if rng.random() < lock_p:
+            taken = set()
+            for r in rng.sample(range(nres), rng.randint(1, min(3, nres))):
+                # a task locking both a resource and its own ancestor can
+                # never acquire its lock set — skip such combinations
+                if any(r in chain(q) or q in chain(r) for q in taken):
+                    continue
+                taken.add(r)
+                s.addlock(i, r)
+    return s, costs
+
+
+class TestArrayPrepare:
+    def test_weights_match_reference_exactly(self):
+        """Vectorized Kahn + segment-max sweep must be *bitwise* equal to
+        the reference recurrence from weights.py, flat and hierarchical."""
+        rng = random.Random(1)
+        for case in range(80):
+            s, costs = random_sched(rng, hierarchical=(case % 2 == 0))
+            s.prepare()
+            unlocks = [s.tasks[i].unlocks for i in range(s.nr_tasks)]
+            ref, order = critical_path_weights(s.nr_tasks, unlocks, costs)
+            got = [t.weight for t in s.tasks]
+            assert got == ref, f"case {case}: weights diverge"
+            # topo_order is a valid topological order
+            pos = {t: i for i, t in enumerate(s.topo_order)}
+            for i in range(s.nr_tasks):
+                for j in unlocks[i]:
+                    assert pos[i] < pos[j]
+
+    def test_cycle_detection(self):
+        s = QSched()
+        a, b = s.addtask(), s.addtask()
+        s.addunlock(a, b)
+        s.addunlock(b, a)
+        with pytest.raises(ValueError, match="cycle"):
+            s.prepare()
+
+    def test_cost_update_recomputes_weights_without_recompiling(self):
+        s = QSched()
+        a, b = s.addtask(cost=1.0), s.addtask(cost=2.0)
+        s.addunlock(a, b)
+        s.prepare()
+        g = s.graph
+        assert [t.weight for t in s.tasks] == [3.0, 2.0]
+        s.set_costs([5.0, 2.0])
+        s.prepare()
+        assert s.graph is g, "structure recompiled for a pure cost change"
+        assert [t.weight for t in s.tasks] == [7.0, 2.0]
+
+
+class TestPlanLowering:
+    def test_rounds_valid_on_random_conflicting_graphs(self):
+        rng = random.Random(2)
+        for case in range(40):
+            s, _ = random_sched(rng, hierarchical=(case % 2 == 0))
+            nr_lanes = rng.randint(1, 6)
+            plan = lower(s, nr_lanes, cache=False)
+            rounds = conflict_rounds(s, nr_lanes)
+            validate_rounds(s, rounds)
+            assert sum(len(r.tids) for r in plan.rounds) == s.nr_tasks
+            # every task appears in exactly one lane of its round
+            for rnd in plan.rounds:
+                lane_tasks = [t for lane in rnd.lanes for t in lane]
+                assert sorted(lane_tasks) == sorted(rnd.tids)
+
+    def test_level_shortcut_matches_greedy(self):
+        """On conflict-free-by-level graphs (QR) the level shortcut must
+        reproduce the general greedy constructor exactly."""
+        s, _ = qr.make_qr_graph(10, 10)
+        s.prepare()
+        p_fast = plan_mod._lower(s, 8, None, "h")
+        assert p_fast.stats["level_shortcut"]
+        orig = plan_mod._level_rounds
+        plan_mod._level_rounds = lambda *a, **k: None
+        try:
+            p_slow = plan_mod._lower(s, 8, None, "h")
+        finally:
+            plan_mod._level_rounds = orig
+        assert not p_slow.stats["level_shortcut"]
+        assert [r.tids for r in p_fast.rounds] == [r.tids for r in p_slow.rounds]
+        assert [r.lanes for r in p_fast.rounds] == [r.lanes for r in p_slow.rounds]
+        assert [r.batches for r in p_fast.rounds] == [
+            r.batches for r in p_slow.rounds]
+
+    def test_conflicting_ready_set_falls_back(self):
+        """Tasks sharing one resource must spread across rounds (greedy
+        path), still passing validation."""
+        s = QSched()
+        r = s.addres()
+        for i in range(5):
+            t = s.addtask(data=i, cost=1.0)
+            s.addlock(t, r)
+        plan = lower(s, 2, cache=False)
+        assert not plan.stats["level_shortcut"]
+        assert plan.nr_rounds == 5
+        validate_rounds(s, conflict_rounds(s, 2))
+
+    def test_hierarchy_blocks_round_sharing(self):
+        s = QSched()
+        root = s.addres()
+        kid = s.addres(parent=root)
+        tp = s.addtask(cost=1.0)
+        s.addlock(tp, root)
+        tc = s.addtask(cost=1.0)
+        s.addlock(tc, kid)
+        plan = lower(s, 2, cache=False)
+        assert plan.nr_rounds == 2
+        validate_rounds(s, conflict_rounds(s, 2))
+
+    def test_max_tasks_per_round_cap(self):
+        s = QSched()
+        for i in range(10):
+            s.addtask(cost=1.0)
+        plan = lower(s, 2, max_tasks_per_round=3, cache=False)
+        assert all(len(r.tids) <= 3 for r in plan.rounds)
+        assert sum(len(r.tids) for r in plan.rounds) == 10
+
+
+class TestPlanCache:
+    def test_identical_structure_hits_cache(self):
+        clear_plan_cache()
+        s1, _ = qr.make_qr_graph(6, 6)
+        s2, _ = qr.make_qr_graph(6, 6)   # rebuilt, structurally identical
+        p1 = lower(s1, 4)
+        p2 = lower(s2, 4)
+        assert p1 is p2, "structurally identical graph must reuse the plan"
+
+    def test_cost_change_misses_cache(self):
+        clear_plan_cache()
+        s1, _ = qr.make_qr_graph(6, 6)
+        p1 = lower(s1, 4)
+        s1.set_costs([c * 2 for c in s1._tcost])
+        p2 = lower(s1, 4)
+        assert p1 is not p2
+
+    def test_type_change_misses_cache(self):
+        """Same structure/costs but different task types must not share a
+        plan (TypedBatch types are baked into the plan)."""
+        clear_plan_cache()
+
+        def build(swap):
+            s = QSched()
+            a = s.addtask(type=1 if swap else 0, cost=1.0)
+            b = s.addtask(type=0 if swap else 1, cost=1.0)
+            s.addunlock(a, b)
+            return s
+        p1 = lower(build(False), 2)
+        p2 = lower(build(True), 2)
+        assert p1 is not p2
+        assert [tb.ttype for r in p2.rounds for tb in r.batches] == [1, 0]
+
+    def test_lane_count_in_key(self):
+        clear_plan_cache()
+        s, _ = qr.make_qr_graph(6, 6)
+        assert lower(s, 4) is not lower(s, 8)
+
+    def test_cached_plan_executes_on_rebuilt_sched(self):
+        clear_plan_cache()
+        s1, _ = qr.make_qr_graph(5, 5)
+        lower(s1, 2)
+        s2, _ = qr.make_qr_graph(5, 5)
+        plan = lower(s2, 2)
+        seen = []
+        registry = {tt: BatchSpec(
+            run_one=lambda tid, d, tt=tt: seen.append((tt, d)))
+            for tt in range(4)}
+        plan.execute(s2, registry)
+        assert len(seen) == s2.nr_tasks
+
+
+class TestBatchDispatch:
+    def test_run_batch_used_above_min_batch(self):
+        s = QSched()
+        for i in range(6):
+            s.addtask(type=7, data=i, cost=1.0)
+        ones, batches = [], []
+        reg = {7: BatchSpec(run_one=lambda tid, d: ones.append(d),
+                            run_batch=lambda tids, ds: batches.append(ds),
+                            min_batch=2)}
+        lower(s, 2, cache=False).execute(s, reg)
+        assert batches == [[0, 1, 2, 3, 4, 5]] and not ones
+
+    def test_singletons_use_run_one(self):
+        s = QSched()
+        prev = None
+        for i in range(3):          # a chain: one task per round
+            t = s.addtask(type=7, data=i, cost=1.0)
+            if prev is not None:
+                s.addunlock(prev, t)
+            prev = t
+        ones, batches = [], []
+        reg = {7: BatchSpec(run_one=lambda tid, d: ones.append(d),
+                            run_batch=lambda tids, ds: batches.append(ds))}
+        lower(s, 1, cache=False).execute(s, reg)
+        assert ones == [0, 1, 2] and not batches
+
+    def test_virtual_tasks_skipped(self):
+        from repro.core import FLAG_VIRTUAL
+        s = QSched()
+        s.addtask(type=0, data="a")
+        s.addtask(type=0, data="v", flags=FLAG_VIRTUAL)
+        seen = []
+        reg = {0: BatchSpec(run_one=lambda tid, d: seen.append(d))}
+        lower(s, 1, cache=False).execute(s, reg)
+        assert seen == ["a"]
+
+    def test_missing_spec_raises(self):
+        s = QSched()
+        s.addtask(type=3, data=0)
+        with pytest.raises(KeyError, match="task type 3"):
+            lower(s, 1, cache=False).execute(s, {})
+
+    def test_all_virtual_type_needs_no_spec(self):
+        from repro.core import FLAG_VIRTUAL
+        s = QSched()
+        a = s.addtask(type=0, data="a")
+        v = s.addtask(type=9, data="v", flags=FLAG_VIRTUAL)
+        s.addunlock(a, v)
+        seen = []
+        reg = {0: BatchSpec(run_one=lambda tid, d: seen.append(d))}
+        lower(s, 1, cache=False).execute(s, reg)   # no spec for type 9
+        assert seen == ["a"]
+
+
+class TestVectorizedQRBuilder:
+    @pytest.mark.parametrize("mt,nt", [(1, 1), (4, 4), (8, 8), (5, 3), (3, 5)])
+    def test_streams_identical_to_loop_oracle(self, mt, nt):
+        a, _ = qr.make_qr_graph(mt, nt)
+        b, _ = qr.make_qr_graph_loop(mt, nt)
+        assert a._ttype == b._ttype
+        assert a._tdata == b._tdata
+        assert a._tcost == b._tcost
+        for x, y in ((a._deps, b._deps), (a._locks, b._locks),
+                     (a._uses, b._uses)):
+            xa, xb = x.arrays()
+            ya, yb = y.arrays()
+            assert xa.tolist() == ya.tolist()
+            assert xb.tolist() == yb.tolist()
+        assert a._res_parent == b._res_parent
+        assert a._res_owner == b._res_owner
+
+
+class TestBHRoundsMode:
+    def test_rounds_matches_sequential(self):
+        """Acceptance gate: BH `rounds` mode agrees with `sequential` within
+        1e-4 relative error."""
+        rng = np.random.default_rng(3)
+        x, m = rng.random((1200, 3)), rng.random(1200) + 0.5
+        a1, _, _ = bh.solve(x, m, n_max=32, n_task=128, backend="ref",
+                            mode="sequential")
+        a2, _, _ = bh.solve(x, m, n_max=32, n_task=128, backend="ref",
+                            mode="rounds", nr_workers=4)
+        num = np.linalg.norm(np.asarray(a1) - np.asarray(a2), axis=0)
+        den = np.linalg.norm(np.asarray(a1), axis=0)
+        assert (num / np.maximum(den, 1e-12)).max() < 1e-4
+
+    def test_bh_plan_rounds_validate(self):
+        rng = np.random.default_rng(4)
+        x, m = rng.random((800, 3)), rng.random(800) + 0.5
+        tree = bh.Octree(x, m, n_max=64)
+        g = bh.build_graph(tree, n_task=256, nr_queues=4)
+        validate_rounds(g.sched, conflict_rounds(g.sched, 4))
+
+
+class TestPipelinePlanDriver:
+    def test_plan_grad_equals_monolithic(self):
+        import jax
+        import jax.numpy as jnp
+        S, M = 3, 6
+        key = jax.random.PRNGKey(2)
+        params = [{"w": jax.random.normal(jax.random.fold_in(key, k),
+                                          (8, 8)) * 0.3} for k in range(S)]
+
+        def stage_fn(p, x):
+            return jnp.tanh(x @ p["w"])
+
+        def loss_fn(y, mb):
+            return jnp.mean((y - mb["y"]) ** 2)
+
+        micro = [{"x": jax.random.normal(jax.random.fold_in(key, 10 + m),
+                                         (4, 8)),
+                  "y": jax.random.normal(jax.random.fold_in(key, 50 + m),
+                                         (4, 8))} for m in range(M)]
+        loss_p, grads_p = pipelined_value_and_grad_plan(
+            [stage_fn] * S, loss_fn, params, micro)
+
+        def monolithic(params_list):
+            total = 0.0
+            for mb in micro:
+                h = mb["x"]
+                for p in params_list:
+                    h = stage_fn(p, h)
+                total = total + loss_fn(h, mb)
+            return total / M
+
+        loss_m, grads_m = jax.value_and_grad(monolithic)(params)
+        assert float(jnp.abs(loss_p - loss_m)) < 1e-6
+        for gp, gm in zip(grads_p, grads_m):
+            for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gm)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-6)
+
+
+class TestConstructionValidation:
+    def test_set_costs_length_mismatch_raises(self):
+        s = QSched()
+        s.addtask()
+        s.addtask()
+        with pytest.raises(ValueError, match="2 tasks"):
+            s.set_costs([1.0])
+        with pytest.raises(ValueError, match="3 costs"):
+            s.set_costs([1.0, 2.0, 3.0])
+        s.set_costs([4.0, 5.0])          # matching length still works
+        assert [t.cost for t in s.tasks] == [4.0, 5.0]
+
+    def test_addlock_validates_ids(self):
+        s = QSched()
+        t = s.addtask()
+        r = s.addres()
+        with pytest.raises(ValueError, match="task id"):
+            s.addlock(t + 1, r)
+        with pytest.raises(ValueError, match="resource id"):
+            s.addlock(t, r + 1)
+        with pytest.raises(ValueError, match="resource id"):
+            s.addlock(t, -1)
+
+    def test_adduse_validates_ids(self):
+        s = QSched()
+        t = s.addtask()
+        s.addres()
+        with pytest.raises(ValueError, match="task id"):
+            s.adduse(5, 0)
+        with pytest.raises(ValueError, match="resource id"):
+            s.adduse(t, 9)
+
+    def test_addunlock_validates_ids(self):
+        s = QSched()
+        a, b = s.addtask(), s.addtask()
+        with pytest.raises(ValueError, match="task id"):
+            s.addunlock(a, 7)
+        with pytest.raises(ValueError, match="task id"):
+            s.addunlock(-3, b)
+        with pytest.raises(ValueError, match="itself"):
+            s.addunlock(a, a)
+
+    def test_bulk_apis_validate(self):
+        s = QSched()
+        s.addtask()
+        s.addtask()
+        s.addres()
+        with pytest.raises(ValueError, match="out of range"):
+            s.addunlocks([0], [5])
+        with pytest.raises(ValueError, match="itself"):
+            s.addunlocks([1], [1])
+        with pytest.raises(ValueError, match="out of range"):
+            s.addlocks([0], [3])
+        with pytest.raises(ValueError, match="out of range"):
+            s.adduses([7], [0])
+        with pytest.raises(ValueError, match="mismatch"):
+            s.addunlocks([0, 1], [1])
+        with pytest.raises(ValueError, match="flags=1"):
+            s.addtasks([0, 0], [1.0, 1.0], [None, None], flags=[0])
