@@ -1,0 +1,165 @@
+"""Engine dispatch benchmark: per-round host dispatch vs the fused
+device-resident engine (DESIGN.md §Engine).  Writes ``BENCH_engine.json``
+at the repo root.
+
+Two figures of merit per family:
+
+* **host dispatches per plan** — the per-round BatchSpec path issues one
+  host call per batched group and one per ``run_one`` task
+  (``count_host_dispatches``); the engine issues exactly one jitted call
+  for the whole plan.  This is the paper's Fig-13 overhead argument moved
+  to the dispatch layer: scheduler *and* dispatch off the critical path.
+* **execute wall time** (QR) — steady-state, graph/plan/lowering excluded
+  from both sides, first engine call excluded as compile: the per-round
+  path re-runs ``plan.execute`` against a fresh tile state; the engine
+  re-runs the single fused dispatch against fresh buffers.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine
+from repro.apps import barneshut as bh
+from repro.apps import qr
+from repro.core import lower
+
+from .common import FULL, SMOKE, emit
+
+REPEAT = 3 if SMOKE else 5
+
+
+def _best(setup, timed, repeat=REPEAT):
+    best, out = float("inf"), None
+    for _ in range(repeat):
+        st = setup()
+        t0 = time.perf_counter()
+        out = timed(st)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_qr():
+    mt = nt = 16 if FULL else (6 if SMOKE else 8)
+    b = 32
+    n = mt * b
+    a = jnp.asarray(np.random.default_rng(0).standard_normal((n, n)),
+                    jnp.float32)
+    tiles, _, _ = qr._split_tiles(a, b)
+    sched, _ = qr.make_qr_graph(mt, nt, nr_queues=4)
+    plan = lower(sched, 4)
+    registry = qr._TileState(dict(tiles), "pallas").batch_registry()
+    host_dispatches = engine.count_host_dispatches(plan, sched, registry)
+
+    # per-round host path: fresh tile state per repeat, execute timed
+    # (block on the tile dict so both sides measure completed execution)
+    def setup_rounds():
+        return qr._TileState(dict(tiles), "pallas")
+
+    def run_rounds(st):
+        plan.execute(sched, st.batch_registry())
+        jax.block_until_ready(st.tiles)
+        return st
+    t_rounds, _ = _best(setup_rounds, run_rounds)
+
+    # engine: tables lowered once; fresh (donatable) buffers per repeat
+    state = qr._TileState(dict(tiles), "pallas")
+    tables = engine.lower_tables(
+        plan, sched, state.batch_registry(),
+        arg_width=engine.QR_ARG_WIDTH, pad_type=engine.QR_NOOP)
+    stack0 = jnp.stack([tiles[i, j] for j in range(nt) for i in range(mt)])
+
+    def setup_engine():
+        return (stack0 + 0.0, jnp.zeros_like(stack0))
+    fn = engine.qr_round_fn()
+    engine.execute_plan(tables, fn, (), setup_engine())   # compile warmup
+
+    def run_engine(bufs):
+        out = engine.execute_plan(tables, fn, (), bufs)
+        out[0].block_until_ready()
+        return out
+    t_engine, _ = _best(setup_engine, run_engine)
+
+    tasks = sched.nr_tasks
+    return {
+        "graph": f"qr_{mt}x{nt}",
+        "tasks": tasks,
+        "rounds": plan.nr_rounds,
+        "table": dict(tables.stats),
+        "host_dispatches": {
+            "per_round": host_dispatches,
+            "engine": engine.ENGINE_DISPATCHES_PER_PLAN,
+        },
+        "dispatch_reduction": host_dispatches
+        / engine.ENGINE_DISPATCHES_PER_PLAN,
+        "execute_s": {"per_round": t_rounds, "engine": t_engine},
+        "speedup": t_rounds / t_engine,
+        "tasks_per_sec": {"per_round": tasks / t_rounds,
+                          "engine": tasks / t_engine},
+    }
+
+
+def bench_bh():
+    n = 20000 if FULL else (2000 if SMOKE else 4000)
+    rng = np.random.default_rng(11)
+    x, m = rng.random((n, 3)), rng.random(n) + 0.5
+    tree = bh.Octree(x, m, n_max=64)
+    g = bh.build_graph(tree, n_task=256, nr_queues=4)
+    st = bh.BHState(g, backend="pallas")
+    plan = lower(g.sched, 4)
+    registry = st.batch_registry()
+    host_dispatches = engine.count_host_dispatches(plan, g.sched, registry)
+    tables = engine.lower_tables(plan, g.sched, registry,
+                                 arg_width=engine.BH_ARG_WIDTH,
+                                 pad_type=engine.BH_NOOP)
+
+    def run_engine(state):
+        state.run(mode="engine", nr_workers=4)
+        return state
+    bh.BHState(g, backend="pallas").run(mode="engine")     # compile warmup
+    t_engine, _ = _best(lambda: bh.BHState(g, backend="pallas"), run_engine,
+                        repeat=3)
+    return {
+        "graph": f"bh_{n}",
+        "tasks": g.sched.nr_tasks,
+        "rounds": plan.nr_rounds,
+        "table": dict(tables.stats),
+        "host_dispatches": {
+            "per_round": host_dispatches,
+            "engine": engine.ENGINE_DISPATCHES_PER_PLAN,
+        },
+        "dispatch_reduction": host_dispatches
+        / engine.ENGINE_DISPATCHES_PER_PLAN,
+        "execute_s": {"engine": t_engine},
+    }
+
+
+def main() -> None:
+    out = {"qr": bench_qr(), "bh": bench_bh()}
+    q = out["qr"]
+    emit("engine_qr_per_round_us", q["execute_s"]["per_round"] * 1e6,
+         f"dispatches={q['host_dispatches']['per_round']}")
+    emit("engine_qr_engine_us", q["execute_s"]["engine"] * 1e6,
+         f"dispatches={q['host_dispatches']['engine']} "
+         f"speedup={q['speedup']:.2f}x "
+         f"dispatch_reduction={q['dispatch_reduction']:.0f}x")
+    emit("engine_qr_tasks_per_sec", 0,
+         f"engine={q['tasks_per_sec']['engine']:.0f} "
+         f"per_round={q['tasks_per_sec']['per_round']:.0f}")
+    b = out["bh"]
+    emit("engine_bh_engine_us", b["execute_s"]["engine"] * 1e6,
+         f"tasks={b['tasks']} rounds={b['rounds']} "
+         f"dispatch_reduction={b['dispatch_reduction']:.0f}x")
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    emit("engine_json", 0, str(path))
+
+
+if __name__ == "__main__":
+    main()

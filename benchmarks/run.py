@@ -9,8 +9,9 @@ from __future__ import annotations
 import sys
 import traceback
 
-SECTIONS = ("sched_overhead", "qr_scaling", "bh_scaling", "priority_ablation",
-            "conflict_ablation", "pipeline_bubble", "kernels", "roofline")
+SECTIONS = ("sched_overhead", "engine_dispatch", "qr_scaling", "bh_scaling",
+            "priority_ablation", "conflict_ablation", "pipeline_bubble",
+            "kernels", "roofline")
 
 
 def main() -> None:

@@ -1,5 +1,6 @@
-"""Quickstart: QuickSched in 60 lines — build a task graph with
-dependencies AND conflicts, run it three ways.
+"""Quickstart: QuickSched in ~70 lines — build a task graph with
+dependencies AND conflicts, run it four ways (including the
+device-resident engine).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -36,7 +37,17 @@ gram_err = float(jnp.max(jnp.abs(r.T @ r - a_mat.T @ a_mat)))
 print(f"tiled QR via QuickSched: {sched.nr_tasks} tasks, "
       f"|R^T R - A^T A| = {gram_err:.2e}")
 
-# --- 3. strong scaling of the same graph (simulated workers) ----------------
+# --- 3. the same QR on the device-resident engine ----------------------------
+# The plan lowers to descriptor task tables and the whole factorization
+# executes as ONE jitted dispatch of fused type-branching Pallas rounds
+# (DESIGN.md §Engine) — vs one host dispatch per task/batch per round.
+r_eng, _ = qr.run_qr(a_mat, tile=32, mode="engine")
+host, eng = qr.dispatch_counts(a_mat, tile=32)
+print(f"engine mode: |R_engine - R| = "
+      f"{float(jnp.max(jnp.abs(r_eng - r))):.2e}; "
+      f"host dispatches {host} -> {eng} ({host / eng:.0f}x fewer)")
+
+# --- 4. strong scaling of the same graph (simulated workers) ----------------
 for n in (1, 4, 16, 64):
     s2, _ = qr.make_qr_graph(16, 16, nr_queues=n)
     r2 = simulate(s2, n)

@@ -34,6 +34,10 @@ Execution modes (``BHState.run`` / ``solve``):
   * ``rounds``     — the shared ExecutionPlan lowering: bulk-synchronous
     conflict-free rounds, the SPMD execution of the BH graph (matches
     ``sequential`` up to float reassociation; tested to 1e-4);
+  * ``engine``     — the device-resident engine (DESIGN.md §Engine): tasks
+    expand into direct-interaction work items over zero-mass-padded leaf
+    blocks, the plan lowers to descriptor tables, and the whole solve runs
+    as ONE jitted dispatch of the fused Barnes-Hut megakernel;
   * ``threaded``   — core ThreadedExecutor over a shared numpy buffer,
     where the hierarchical resource locks are the only thing preventing
     lost updates (the paper's conflict-exclusion claim, tested for real).
@@ -48,6 +52,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.core import (BatchSpec, QSched, SequentialExecutor,
                         ThreadedExecutor, lower)
 from repro.kernels.nbody import ops
@@ -310,6 +315,7 @@ class BHState:
         self.accumulate = accumulate
         self.x = jnp.asarray(g.tree.x, dtype=jnp.float32)       # (3, N)
         self.m = jnp.asarray(g.tree.m, dtype=jnp.float32)       # (N,)
+        self._layout = None                  # engine leaf blocks, lazy
         ncells = len(g.tree.cells)
         if accumulate == "numpy":
             self._acc_np = np.zeros((3, g.tree.n), np.float32)
@@ -395,17 +401,120 @@ class BHState:
         self._add_acc(rb, ops.acc_pair(self.x[:, rb], self.x[:, ra],
                                        self.m[ra], eps, be))
 
+    # -- engine lowering -------------------------------------------------------
+    def _engine_layout(self):
+        """Leaf-block layout for the device engine: leaf cells in cid order,
+        each owning a zero-mass-padded (3, P) particle block (P = max leaf
+        count — ragged cells become dense slabs the megakernel can address
+        uniformly).  Computed once per state."""
+        if self._layout is not None:
+            return self._layout
+        tree = self.g.tree
+        leaves = [c.cid for c in tree.cells if not c.split]
+        slot = {cid: k for k, cid in enumerate(leaves)}
+        P = max(tree.cells[cid].count for cid in leaves)
+        xs = np.zeros((len(leaves), 3, P), np.float32)
+        ms = np.zeros((len(leaves), P), np.float32)
+        x_np, m_np = np.asarray(self.x), np.asarray(self.m)
+        for k, cid in enumerate(leaves):
+            c = tree.cells[cid]
+            xs[k, :, :c.count] = x_np[:, c.start:c.start + c.count]
+            ms[k, :c.count] = m_np[c.start:c.start + c.count]
+        self._layout = (leaves, slot, P, xs, ms)
+        return self._layout
+
     def batch_registry(self) -> Dict[int, BatchSpec]:
         """BatchSpecs for the ExecutionPlan ``rounds`` mode.  Cell blocks
         are ragged (per-cell particle counts differ), so every type runs
         per-task; the plan still provides the bulk-synchronous round
         structure (each round is one SPMD step, conflict-freedom proven at
-        lowering time) and the lane assignment."""
-        def one(ttype):
-            return BatchSpec(
-                run_one=lambda tid, data: self.exec_task(ttype, data, tid))
+        lowering time) and the lane assignment.
 
-        return {t: one(t) for t in (T_SELF, T_PAIR, T_PC, T_COM)}
+        Each spec also carries its engine ``encode``: a task expands into
+        its direct-interaction work items over the padded leaf layout —
+        self blocks, one row per pair *direction* (so every row has exactly
+        one write target), COM reductions (leaf or ≤8-children inner), and
+        particle-cell rows whose ragged COM-source lists chunk into
+        ≤8-cell rows padded with the zero-mass dummy cell (the encoders
+        are pure — no side tables).  The encoders resolve the leaf layout
+        lazily, so the host-only ``rounds`` mode never builds the padded
+        blocks.  DESIGN.md §Engine."""
+        def one(ttype):
+            return lambda tid, data: self.exec_task(ttype, data, tid)
+
+        g = self.g
+        cells = g.tree.cells
+        ncells = len(cells)          # dummy pad cell id == ncells
+        kmax = engine.BH_MAX_CHILDREN
+
+        def slot_of(cid):
+            return self._engine_layout()[1][cid]
+
+        def pad_cells(ids):
+            return list(ids) + [ncells] * (kmax - len(ids))
+
+        def enc_com(tid, data):
+            c = cells[data[1]]
+            if c.split:
+                return [(engine.BH_COM_INNER, c.cid, *pad_cells(c.children))]
+            return [(engine.BH_COM_LEAF, c.cid, slot_of(c.cid))]
+
+        def enc_pairs(pairs):
+            rows = []
+            for a, b in pairs:
+                rows.append((engine.BH_PP, slot_of(a), slot_of(b)))
+                rows.append((engine.BH_PP, slot_of(b), slot_of(a)))
+            return rows
+
+        def enc_self(tid, data):
+            rows = [(engine.BH_SELF, slot_of(c))
+                    for c in g.self_blocks.get(tid, [])]
+            return rows + enc_pairs(g.self_pairs.get(tid, []))
+
+        def enc_pair(tid, data):
+            return enc_pairs(g.pair_pairs.get(tid, []))
+
+        def enc_pc(tid, data):
+            srcs = g.pc_lists.get(tid, [])
+            la = slot_of(data[1]) if srcs else -1
+            return [(engine.BH_PC, la, *pad_cells(srcs[i:i + kmax]))
+                    for i in range(0, len(srcs), kmax)]
+
+        enc = {T_SELF: enc_self, T_PAIR: enc_pair, T_PC: enc_pc,
+               T_COM: enc_com}
+        return {t: BatchSpec(run_one=one(t), encode=enc[t])
+                for t in (T_SELF, T_PAIR, T_PC, T_COM)}
+
+    def _run_engine(self, nr_workers: int) -> None:
+        """Lower the plan to descriptor tables and execute the whole solve
+        as one jitted dispatch of the fused megakernel (DESIGN.md
+        §Engine), then scatter the padded leaf accelerations back."""
+        assert self.accumulate == "jnp", (
+            "engine mode bypasses host accumulation; use accumulate='jnp'")
+        leaves, _, P, xs, ms = self._engine_layout()
+        tree = self.g.tree
+        ncells = len(tree.cells)
+        plan = lower(self.g.sched, nr_lanes=max(nr_workers, 1))
+        tables = engine.lower_tables(
+            plan, self.g.sched, self.batch_registry(),
+            arg_width=engine.BH_ARG_WIDTH, pad_type=engine.BH_NOOP)
+        statics = (jnp.asarray(xs), jnp.asarray(ms))
+        buffers = (jnp.zeros((len(leaves), 3, P), jnp.float32),
+                   jnp.zeros((ncells + 1, 3), jnp.float32),
+                   jnp.zeros((ncells + 1, 1), jnp.float32))
+        acc, com, cmass = engine.execute_plan(
+            tables, engine.bh_round_fn(float(self.eps)), statics, buffers)
+        acc_np = np.zeros((3, tree.n), np.float32)
+        acc_host = np.asarray(acc)
+        for k, cid in enumerate(leaves):
+            c = tree.cells[cid]
+            acc_np[:, c.start:c.start + c.count] = acc_host[k, :, :c.count]
+        self.acc = jnp.asarray(acc_np)
+        # host numpy rows (one transfer), not ncells tiny device arrays
+        com_host, cm_host = np.asarray(com), np.asarray(cmass)
+        for cid in range(ncells):
+            self.com[cid] = com_host[cid]
+            self.cmass[cid] = float(cm_host[cid, 0])
 
     # -- drivers ---------------------------------------------------------------
     def run(self, mode: str = "sequential", nr_workers: int = 1) -> None:
@@ -418,6 +527,8 @@ class BHState:
             # from `sequential` only by floating-point reassociation).
             plan = lower(s, nr_lanes=max(nr_workers, 1))
             plan.execute(s, self.batch_registry())
+        elif mode == "engine":
+            self._run_engine(nr_workers)
         elif mode == "threaded":
             assert self.accumulate == "numpy", (
                 "threaded mode requires accumulate='numpy'")

@@ -30,6 +30,11 @@ Execution modes:
     rounds whose same-type task groups are *batched with vmap* over stacked
     tiles via the BatchSpec registry.  On TPU each round is one SPMD step
     and the vmap becomes the kernel grid.
+  * ``engine``     — the device-resident engine (DESIGN.md §Engine): the
+    plan is lowered to descriptor task tables and the whole factorization
+    executes as ONE jitted dispatch of fused type-branching Pallas rounds
+    over a (ntiles, b, b) tile stack (``backend`` is ignored — the
+    megakernel *is* the Pallas path, interpreted on CPU).
   * ``threaded``   — the paper's pthread pool over numpy tiles (host).
 """
 
@@ -41,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.core import BatchSpec, QSched, SequentialExecutor, lower
 from repro.kernels.qr_tile import ops
 
@@ -252,6 +258,8 @@ class _TileState:
         self.t_diag = {}
         self.t_ts = {}
         self.backend = backend
+        self.mt = 1 + max(i for i, _ in tiles)
+        self.nt = 1 + max(j for _, j in tiles)
 
     def exec_task(self, ttype, data):
         i, j, k = data
@@ -280,7 +288,10 @@ class _TileState:
         """BatchSpecs for the ExecutionPlan: LARFT/SSRFT groups stack their
         tiles and run one vmapped kernel; GEQRF is singular per round and
         TSQRF batches would mix conflicting same-column updates, so both
-        stay per-task."""
+        stay per-task.  Each spec also carries its engine ``encode`` — the
+        descriptor-row lowering the ``engine`` mode ships to the fused
+        megakernel (task types map to themselves; args are column-major
+        tile indices, DESIGN.md §Engine)."""
         tl, be = self.tiles, self.backend
 
         def larft_batch(tids, datas):
@@ -306,12 +317,54 @@ class _TileState:
         def one(ttype):
             return lambda tid, d: self.exec_task(ttype, d)
 
+        mt = self.mt
+
+        def res(i, j):
+            return j * mt + i
+
+        def enc_geqrf(tid, d):
+            i, j, k = d
+            return [(engine.QR_GEQRF, res(k, k))]
+
+        def enc_larft(tid, d):
+            i, j, k = d
+            return [(engine.QR_LARFT, res(k, k), res(k, j))]
+
+        def enc_tsqrf(tid, d):
+            i, j, k = d
+            return [(engine.QR_TSQRF, res(k, k), res(i, k))]
+
+        def enc_ssrft(tid, d):
+            i, j, k = d
+            return [(engine.QR_SSRFT, res(i, k), res(k, j), res(i, j))]
+
         return {
-            T_GEQRF: BatchSpec(run_one=one(T_GEQRF)),
-            T_LARFT: BatchSpec(run_one=one(T_LARFT), run_batch=larft_batch),
-            T_TSQRF: BatchSpec(run_one=one(T_TSQRF)),
-            T_SSRFT: BatchSpec(run_one=one(T_SSRFT), run_batch=ssrft_batch),
+            T_GEQRF: BatchSpec(run_one=one(T_GEQRF), encode=enc_geqrf),
+            T_LARFT: BatchSpec(run_one=one(T_LARFT), run_batch=larft_batch,
+                               encode=enc_larft),
+            T_TSQRF: BatchSpec(run_one=one(T_TSQRF), encode=enc_tsqrf),
+            T_SSRFT: BatchSpec(run_one=one(T_SSRFT), run_batch=ssrft_batch,
+                               encode=enc_ssrft),
         }
+
+    def run_engine(self, plan, sched) -> None:
+        """Execute a lowered plan on the device engine: stack the tile dict
+        into a (ntiles, b, b) buffer (column-major tile index, matching the
+        resource ids), lower descriptor tables through the same registry,
+        run the fused megakernel rounds as one jitted dispatch, and scatter
+        the tiles back."""
+        mt, nt = self.mt, self.nt
+        tables = engine.lower_tables(
+            plan, sched, self.batch_registry(),
+            arg_width=engine.QR_ARG_WIDTH, pad_type=engine.QR_NOOP)
+        tiles = jnp.stack([self.tiles[i, j]
+                           for j in range(nt) for i in range(mt)])
+        tmat = jnp.zeros_like(tiles)
+        tiles, _ = engine.execute_plan(
+            tables, engine.qr_round_fn(), (), (tiles, tmat))
+        for j in range(nt):
+            for i in range(mt):
+                self.tiles[i, j] = tiles[j * mt + i]
 
 
 def run_qr(a: jnp.ndarray, tile: int = 32, mode: str = "sequential",
@@ -326,12 +379,27 @@ def run_qr(a: jnp.ndarray, tile: int = 32, mode: str = "sequential",
     elif mode == "rounds":
         plan = lower(sched, nr_lanes=max(nr_queues, 1))
         plan.execute(sched, state.batch_registry())
+    elif mode == "engine":
+        plan = lower(sched, nr_lanes=max(nr_queues, 1))
+        state.run_engine(plan, sched)
     elif mode == "threaded":
         sched.run_threaded(nr_queues, state.exec_task)
     else:
         raise ValueError(mode)
     r = _assemble_r(state.tiles, mt, nt, tile, a.dtype)
     return r, sched
+
+
+def dispatch_counts(a: jnp.ndarray, tile: int = 32, nr_queues: int = 1):
+    """(host dispatches of the per-round path, engine dispatches) for
+    ``a``'s QR plan — the figure of merit of the device engine
+    (``benchmarks/engine_dispatch.py``, DESIGN.md §Engine)."""
+    tiles, mt, nt = _split_tiles(jnp.asarray(a), tile)
+    sched, _ = make_qr_graph(mt, nt, nr_queues=nr_queues)
+    plan = lower(sched, nr_lanes=max(nr_queues, 1))
+    host = engine.count_host_dispatches(
+        plan, sched, _TileState(tiles, "pallas").batch_registry())
+    return host, engine.ENGINE_DISPATCHES_PER_PLAN
 
 
 def paper_counts(mt: int = 32, nt: int = 32):

@@ -26,6 +26,7 @@ class ThreadedExecutor:
         self.sched = sched
         self.nr_threads = nr_threads
         self.errors: List[BaseException] = []
+        self._abort = threading.Event()
 
     def _worker(self, wid: int, fun: Callable[..., None],
                 pass_tid: bool) -> None:
@@ -33,7 +34,7 @@ class ThreadedExecutor:
         qid = wid % s.nr_queues
         ttype, tdata, tflags = s._ttype, s._tdata, s._tflags
         try:
-            while True:
+            while not self._abort.is_set():
                 tid = s.gettask(qid, block=False)
                 if tid is None:
                     if s.waiting <= 0:
@@ -48,8 +49,14 @@ class ThreadedExecutor:
                 s.done(tid)
         except BaseException as e:  # surface worker errors to the caller
             self.errors.append(e)
+            # A failed task never reaches done(), so `waiting` can never
+            # drain — without this abort the surviving workers would spin
+            # forever and run() would hang in join instead of raising.
+            self._abort.set()
 
     def run(self, fun: Callable[..., None], pass_tid: bool = False) -> None:
+        self.errors.clear()
+        self._abort.clear()
         self.sched.start(threaded=True)
         threads = [
             threading.Thread(target=self._worker, args=(w, fun, pass_tid),

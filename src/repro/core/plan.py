@@ -59,10 +59,17 @@ class BatchSpec:
     ``run_one(tid, data)`` executes a single task; ``run_batch(tids, datas)``
     (optional) executes a whole same-type group — it is only used when the
     group has at least ``min_batch`` tasks.
+
+    ``encode`` (optional) is the *device* lowering of the same type: it maps
+    one task to integer descriptor rows ``[(engine_type, arg0, ...), ...]``
+    for the ``repro.engine`` task tables (DESIGN.md §Engine).  One registry
+    therefore describes a task family for both execution paths — the
+    host-dispatched round executor below and the device-resident engine.
     """
     run_one: Callable[[int, Any], None]
     run_batch: Optional[Callable[[Sequence[int], Sequence[Any]], None]] = None
     min_batch: int = 2
+    encode: Optional[Callable[[int, Any], Sequence[Tuple[int, ...]]]] = None
 
 
 @dataclass(frozen=True)
@@ -96,15 +103,14 @@ class ExecutionPlan:
     def nr_rounds(self) -> int:
         return len(self.rounds)
 
-    def execute(self, sched: QSched,
-                registry: Mapping[int, BatchSpec]) -> None:
-        """Run every round's typed batches through the registry.  Virtual
-        tasks are scheduled but never passed to a spec (FLAG_VIRTUAL).
+    def check_compatible(self, sched: QSched) -> None:
+        """Refuse to pair this plan with a structurally different graph.
 
         When the plan carries a structural hash (cached lowerings), the
         scheduler must hash identically — executing a plan against a graph
         with different dependencies/conflicts would silently violate them.
-        """
+        Shared by ``execute`` and the engine table lowering
+        (``repro.engine.descriptors``)."""
         if sched.nr_tasks != self.nr_tasks:
             raise ValueError(
                 f"plan lowered for {self.nr_tasks} tasks, scheduler has "
@@ -113,6 +119,12 @@ class ExecutionPlan:
             raise ValueError(
                 "plan was lowered for a structurally different graph "
                 "(structural hash mismatch)")
+
+    def execute(self, sched: QSched,
+                registry: Mapping[int, BatchSpec]) -> None:
+        """Run every round's typed batches through the registry.  Virtual
+        tasks are scheduled but never passed to a spec (FLAG_VIRTUAL)."""
+        self.check_compatible(sched)
         datas = sched._tdata
         flags = sched._tflags
         for rnd in self.rounds:

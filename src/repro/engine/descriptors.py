@@ -1,0 +1,158 @@
+"""Task-table lowering: an ExecutionPlan as dense device-resident arrays.
+
+``lower_tables`` turns a lowered :class:`~repro.core.plan.ExecutionPlan`
+into a :class:`TaskTable` — per-round, padded integer descriptor slabs plus
+round offsets/lengths — by asking the same ``BatchSpec`` registry that
+drives the host round executor for each task's *device* encoding
+(``BatchSpec.encode``).  QR, Barnes-Hut and any future family (the pipeline
+synthesizer) all lower through this one path; what differs per family is
+only the encoder and the megakernel that interprets the rows
+(``repro.engine.megakernel``).  Layout and invariants: DESIGN.md §Engine.
+
+A descriptor row is ``[engine_type, arg0, ..., arg{A-1}]`` (int32).  One
+*task* may encode to several rows (Barnes-Hut tasks expand into their
+direct-interaction work items); rows inherit the task's round, so every
+slab stays conflict-free — rows of one round belong to tasks whose locked
+resource subtrees are disjoint (property-tested in
+``tests/test_engine_properties.py``).  Row order within a round mirrors
+``ExecutionPlan.execute``: typed batches in ascending type order, tasks in
+batch order — so the engine's in-round sequencing matches the host rounds
+mode exactly.  Virtual tasks encode to nothing.  Slabs are padded to the
+plan-wide maximum width with ``pad_type`` rows (the megakernel's no-op
+branch).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Tuple
+
+import numpy as np
+
+from repro.core.graph import FLAG_VIRTUAL, QSched
+from repro.core.plan import BatchSpec, ExecutionPlan
+
+
+@dataclass(frozen=True)
+class TaskTable:
+    """Dense, device-ready descriptor tables for one lowered plan.
+
+    ``desc[r, q]`` is row ``q`` of round ``r``: ``[etype, args...]``;
+    ``tids[r, q]`` is the owning task id (-1 for padding) — host-side
+    provenance for tests and stats, never shipped to the kernel.
+    ``lengths[r]`` counts real rows; ``offsets`` are the flat row offsets
+    of each round within the plan (``offsets[-1] == nr_items``).
+    """
+    desc: np.ndarray           # (R, W, 1 + arg_width) int32
+    tids: np.ndarray           # (R, W) int32, -1 padded
+    lengths: np.ndarray        # (R,) int32
+    offsets: np.ndarray        # (R + 1,) int64
+    arg_width: int
+    pad_type: int
+    nr_tasks: int
+    structural_hash: str
+    stats: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def nr_rounds(self) -> int:
+        return self.desc.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.desc.shape[1]
+
+    @property
+    def nr_items(self) -> int:
+        return int(self.offsets[-1])
+
+    def round_tids(self, r: int) -> List[int]:
+        row = self.tids[r]
+        return row[row >= 0].tolist()
+
+
+def lower_tables(plan: ExecutionPlan, sched: QSched,
+                 registry: Mapping[int, BatchSpec], *,
+                 arg_width: int, pad_type: int) -> TaskTable:
+    """Lower a plan's rounds into a :class:`TaskTable` via the registry's
+    ``encode`` hooks.  Raises ``KeyError`` when a non-virtual task type has
+    no spec or no encoder, mirroring ``ExecutionPlan.execute``."""
+    plan.check_compatible(sched)
+    flags = sched._tflags
+    datas = sched._tdata
+    per_round_rows: List[List[Tuple[int, ...]]] = []
+    per_round_tids: List[List[int]] = []
+    for rnd in plan.rounds:
+        rows: List[Tuple[int, ...]] = []
+        rtids: List[int] = []
+        for tb in rnd.batches:
+            real = [t for t in tb.tids if not flags[t] & FLAG_VIRTUAL]
+            if not real:
+                continue
+            spec = registry.get(tb.ttype)
+            if spec is None:
+                raise KeyError(
+                    f"no BatchSpec registered for task type {tb.ttype}")
+            if spec.encode is None:
+                raise KeyError(
+                    f"BatchSpec for task type {tb.ttype} has no engine "
+                    f"encoder (BatchSpec.encode)")
+            for tid in real:
+                for row in spec.encode(tid, datas[tid]):
+                    row = tuple(int(v) for v in row)
+                    if len(row) > 1 + arg_width:
+                        raise ValueError(
+                            f"encoder for type {tb.ttype} emitted {len(row)}"
+                            f" columns, table holds {1 + arg_width}")
+                    rows.append(row)
+                    rtids.append(tid)
+        per_round_rows.append(rows)
+        per_round_tids.append(rtids)
+
+    # an empty plan lowers to a genuinely 0-round table, so the
+    # nr_rounds == plan.nr_rounds invariant holds for every input
+    nr_rounds = len(per_round_rows)
+    width = max((len(r) for r in per_round_rows), default=0) or 1
+    desc = np.zeros((nr_rounds, width, 1 + arg_width), dtype=np.int32)
+    desc[:, :, 0] = pad_type
+    tids = np.full((nr_rounds, width), -1, dtype=np.int32)
+    lengths = np.zeros(nr_rounds, dtype=np.int32)
+    for r, (rows, rtids) in enumerate(zip(per_round_rows, per_round_tids)):
+        lengths[r] = len(rows)
+        for q, row in enumerate(rows):
+            desc[r, q, :len(row)] = row
+        if rtids:
+            tids[r, :len(rtids)] = rtids
+    offsets = np.zeros(nr_rounds + 1, dtype=np.int64)
+    np.cumsum(lengths, out=offsets[1:])
+    nr_items = int(offsets[-1])
+    pad_rows = nr_rounds * width - nr_items
+    return TaskTable(
+        desc=desc, tids=tids, lengths=lengths, offsets=offsets,
+        arg_width=arg_width, pad_type=pad_type, nr_tasks=plan.nr_tasks,
+        structural_hash=plan.structural_hash,
+        stats={"rounds": nr_rounds, "width": width, "items": nr_items,
+               "pad_rows": pad_rows,
+               "pad_fraction": pad_rows / max(nr_rounds * width, 1)})
+
+
+def count_host_dispatches(plan: ExecutionPlan, sched: QSched,
+                          registry: Mapping[int, BatchSpec]) -> int:
+    """Host kernel dispatches the per-round BatchSpec path performs for
+    this plan: one per batched group, one per ``run_one`` task.  The engine
+    replaces all of them with a single jitted call — this is the
+    denominator of the dispatch-reduction figure in
+    ``benchmarks/engine_dispatch.py``."""
+    flags = sched._tflags
+    n = 0
+    for rnd in plan.rounds:
+        for tb in rnd.batches:
+            real = [t for t in tb.tids if not flags[t] & FLAG_VIRTUAL]
+            if not real:
+                continue
+            spec = registry.get(tb.ttype)
+            if (spec is not None and spec.run_batch is not None
+                    and len(real) >= spec.min_batch):
+                n += 1
+            else:
+                n += len(real)
+    return n

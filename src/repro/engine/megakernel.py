@@ -1,0 +1,270 @@
+"""Fused-round Pallas megakernels: one kernel launch per round per family.
+
+Each task *family* (tiled QR, Barnes-Hut) gets one Pallas kernel that takes
+a round's descriptor slab and the family's resident state buffers, walks
+the slab with an in-kernel ``fori_loop`` and branches on the engine type of
+each row with ``lax.switch`` (exllamav3-style type fusion) — replacing the
+N per-type ``pallas_call``s the host rounds mode issues per round with a
+single launch whose operands never leave the device.  Layout, the
+type-branch contract and the donation/aliasing rules are documented in
+DESIGN.md §Engine.
+
+Contract highlights (see the design doc for the full statement):
+
+* State buffers are passed in and aliased to the outputs
+  (``input_output_aliases``); the kernel copies them into its output refs
+  once, then every branch loads *and* stores through the output refs, so
+  items observe all earlier items' writes — read-modify-write accumulation
+  (Barnes-Hut ``+=``) and the QR triangular in-place updates are exact.
+* Row order within a slab is the host rounds-mode order (ascending task
+  type, batch order within a type), so the engine's sequencing is
+  observationally identical to ``ExecutionPlan.execute``; conflict-freedom
+  of every slab is what makes the rounds independent of *which* items land
+  together (property-tested).
+* Padding rows carry the family's no-op type — the last ``lax.switch``
+  branch, so out-of-range types clamp to a no-op rather than garbage.
+* The numerical bodies are the exact value-level functions the per-op
+  kernels use (``kernels.qr_tile.kernel.*_math``,
+  ``kernels.nbody.kernel.acc_block``) — one source of truth for the math.
+
+On a CPU runtime the kernels run in Pallas interpret mode (same default as
+``kernels/*/ops.py``), so CI executes the identical engine code path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.nbody.kernel import acc_block
+from repro.kernels.qr_tile.kernel import (apply_qt_math, apply_tsqt_math,
+                                          geqrf_math, tsqrf_math)
+
+# QR engine types — intentionally equal to apps.qr.T_* so task types encode
+# to themselves; QR_NOOP pads the slabs (descriptors.lower_tables pad_type).
+QR_GEQRF, QR_LARFT, QR_TSQRF, QR_SSRFT, QR_NOOP = range(5)
+QR_ARG_WIDTH = 3       # rows: [etype, slot0, slot1, slot2] (tile indices)
+
+# Barnes-Hut engine (work-item) types; BH_NOOP pads.
+(BH_COM_LEAF, BH_COM_INNER, BH_SELF, BH_PP, BH_PC, BH_NOOP) = range(6)
+BH_MAX_CHILDREN = 8    # octree fan-out; COM_INNER rows carry 8 child cells
+# and ragged PC source lists chunk into rows of 8 cells (pad = zero-mass)
+BH_ARG_WIDTH = 1 + BH_MAX_CHILDREN   # rows: [etype, write, a0..a7]
+
+
+def _default_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _full_spec(shape):
+    return pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+
+
+# ---------------------------------------------------------------------------
+# tiled QR family
+# ---------------------------------------------------------------------------
+
+def _qr_kernel(desc_ref, tiles_in, tmat_in, tiles_ref, tmat_ref):
+    tiles_ref[...] = tiles_in[...]
+    tmat_ref[...] = tmat_in[...]
+
+    def tile(ref, i):
+        return pl.load(ref, (pl.ds(i, 1), slice(None), slice(None)))[0]
+
+    def put(ref, i, v):
+        pl.store(ref, (pl.ds(i, 1), slice(None), slice(None)), v[None])
+
+    def body(q, carry):
+        s0 = desc_ref[q, 1]
+        s1 = desc_ref[q, 2]
+        s2 = desc_ref[q, 3]
+
+        def geqrf():      # [kk] — factor the diagonal tile, stash T
+            rv, _, t = geqrf_math(tile(tiles_ref, s0))
+            put(tiles_ref, s0, rv)
+            put(tmat_ref, s0, t)
+            return 0
+
+        def larft():      # [kk, kj] — apply Qᵀ of the diagonal tile
+            out = apply_qt_math(tile(tiles_ref, s0), tile(tmat_ref, s0),
+                                tile(tiles_ref, s1))
+            put(tiles_ref, s1, out)
+            return 0
+
+        def tsqrf():      # [kk, ik] — R stacked over the rect tile; V
+            a0 = tile(tiles_ref, s0)       # stays below kk's diagonal
+            r1, v2, _, t = tsqrf_math(jnp.triu(a0), tile(tiles_ref, s1))
+            put(tiles_ref, s0, jnp.triu(r1) + jnp.tril(a0, -1))
+            put(tiles_ref, s1, v2)
+            put(tmat_ref, s1, t)
+            return 0
+
+        def ssrft():      # [ik, kj, ij] — apply the (I; V2) reflector
+            o1, o2 = apply_tsqt_math(tile(tiles_ref, s0),
+                                     tile(tmat_ref, s0),
+                                     tile(tiles_ref, s1),
+                                     tile(tiles_ref, s2))
+            put(tiles_ref, s1, o1)
+            put(tiles_ref, s2, o2)
+            return 0
+
+        def noop():
+            return 0
+
+        jax.lax.switch(desc_ref[q, 0], (geqrf, larft, tsqrf, ssrft, noop))
+        return carry
+
+    jax.lax.fori_loop(0, desc_ref.shape[0], body, 0)
+
+
+@functools.lru_cache(maxsize=None)
+def qr_round_fn(interpret: Optional[bool] = None):
+    """Round executor for the QR family: ``(desc_slab, (), (tiles, tmat))
+    -> (tiles, tmat)``.  ``tiles``/``tmat`` are (ntiles, b, b) stacks in
+    column-major tile-index order; ``tmat[kk]`` holds the DGEQRF T factor
+    and ``tmat[ik]`` the DTSQRF one (disjoint indices, one buffer).  Cached
+    per ``interpret`` flag so the runner's jit cache is shared."""
+    interp = _default_interpret(interpret)
+
+    def round_fn(desc, statics, buffers):
+        del statics
+        tiles, tmat = buffers
+        return pl.pallas_call(
+            _qr_kernel,
+            grid=(),
+            in_specs=[_full_spec(desc.shape), _full_spec(tiles.shape),
+                      _full_spec(tmat.shape)],
+            out_specs=(_full_spec(tiles.shape), _full_spec(tmat.shape)),
+            out_shape=(jax.ShapeDtypeStruct(tiles.shape, tiles.dtype),
+                       jax.ShapeDtypeStruct(tmat.shape, tmat.dtype)),
+            input_output_aliases={1: 0, 2: 1},
+            interpret=interp,
+        )(desc, tiles, tmat)
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Barnes-Hut family
+# ---------------------------------------------------------------------------
+
+def _bh_kernel(desc_ref, xs_ref, ms_ref, acc_in, com_in, cm_in,
+               acc_ref, com_ref, cm_ref, *, eps):
+    acc_ref[...] = acc_in[...]
+    com_ref[...] = com_in[...]
+    cm_ref[...] = cm_in[...]
+    dtype = acc_ref.dtype
+    npart = xs_ref.shape[2]
+    ncell = com_ref.shape[0]        # ncells + 1 (last row = zero-mass pad)
+    cell_iota = jax.lax.broadcasted_iota(jnp.int32, (1, ncell), 1)
+    gi = jax.lax.broadcasted_iota(jnp.int32, (npart, 1), 0)
+    gj = jax.lax.broadcasted_iota(jnp.int32, (1, npart), 1)
+
+    def leaf_x(i):                  # (3, P) padded particle block
+        return pl.load(xs_ref, (pl.ds(i, 1), slice(None), slice(None)))[0]
+
+    def leaf_m(i):                  # (P,) zero-padded masses
+        return pl.load(ms_ref, (pl.ds(i, 1), slice(None)))[0]
+
+    def gather_cells(idx):          # (K,) cell ids → (K,3) coms, (K,) masses
+        onehot = (idx[:, None] == cell_iota).astype(dtype)
+        return onehot @ com_ref[...], (onehot @ cm_ref[...])[:, 0]
+
+    def add_acc(i, delta):          # acc[i] += delta, read-modify-write
+        cur = pl.load(acc_ref, (pl.ds(i, 1), slice(None), slice(None)))
+        pl.store(acc_ref, (pl.ds(i, 1), slice(None), slice(None)),
+                 cur + delta[None])
+
+    def pair_delta(xi, xj, mj, mask_diag=False):
+        dx0, dx1, dx2, w = acc_block(xi, xj, mj.reshape(1, -1), eps)
+        if mask_diag:
+            w = jnp.where(gi == gj, jnp.zeros_like(w), w)
+        return jnp.stack([jnp.sum(dx0 * w, axis=1),
+                          jnp.sum(dx1 * w, axis=1),
+                          jnp.sum(dx2 * w, axis=1)])
+
+    def put_com(w, c, tot):
+        pl.store(com_ref, (pl.ds(w, 1), slice(None)), c[None])
+        pl.store(cm_ref, (pl.ds(w, 1), slice(None)), tot.reshape(1, 1))
+
+    def body(q, carry):
+        w = desc_ref[q, 1]
+        s = desc_ref[q, 2]
+
+        def cell_slots():      # the 8 padded cell-id slots of this row
+            return pl.load(desc_ref,
+                           (pl.ds(q, 1), pl.ds(2, BH_MAX_CHILDREN)))[0]
+
+        def com_leaf():   # [cell, leaf] — mass-weighted mean of the block
+            x, m = leaf_x(s), leaf_m(s)
+            tot = jnp.sum(m)
+            put_com(w, (x @ m) / jnp.maximum(tot, 1e-30), tot)
+            return 0
+
+        def com_inner():  # [cell, c0..c7] — combine children's COMs
+            xs_sel, m_sel = gather_cells(cell_slots())
+            tot = jnp.sum(m_sel)
+            put_com(w, (xs_sel.T @ m_sel) / jnp.maximum(tot, 1e-30), tot)
+            return 0
+
+        def self_():      # [leaf] — all pairs within one block
+            x, m = leaf_x(w), leaf_m(w)
+            add_acc(w, pair_delta(x, x, m, mask_diag=True))
+            return 0
+
+        def pp():         # [leaf_i, leaf_j] — one direction of a pair block
+            add_acc(w, pair_delta(leaf_x(w), leaf_x(s), leaf_m(s)))
+            return 0
+
+        def pc():         # [leaf, s0..s7] — leaf against ≤8 COM sources
+            xs_sel, m_sel = gather_cells(cell_slots())
+            add_acc(w, pair_delta(leaf_x(w), xs_sel.T, m_sel))
+            return 0
+
+        def noop():
+            return 0
+
+        jax.lax.switch(desc_ref[q, 0],
+                       (com_leaf, com_inner, self_, pp, pc, noop))
+        return carry
+
+    jax.lax.fori_loop(0, desc_ref.shape[0], body, 0)
+
+
+@functools.lru_cache(maxsize=None)
+def bh_round_fn(eps: float, interpret: Optional[bool] = None):
+    """Round executor for the Barnes-Hut family:
+    ``(desc_slab, (xs, ms), (acc, com, cmass)) -> (acc, com, cmass)``.
+    ``xs``/``ms`` are (L, 3, P)/(L, P) zero-mass-padded leaf blocks
+    (read-only); ``com``/``cmass`` carry one extra zero row as the gather
+    pad target — ragged COM-source lists arrive pre-chunked into ≤8-source
+    PC rows, so there is no side table.  Cached per (eps, interpret) so
+    the runner's jit cache is shared."""
+    interp = _default_interpret(interpret)
+    kern = functools.partial(_bh_kernel, eps=float(eps))
+
+    def round_fn(desc, statics, buffers):
+        xs, ms = statics
+        acc, com, cm = buffers
+        return pl.pallas_call(
+            kern,
+            grid=(),
+            in_specs=[_full_spec(desc.shape), _full_spec(xs.shape),
+                      _full_spec(ms.shape), _full_spec(acc.shape),
+                      _full_spec(com.shape), _full_spec(cm.shape)],
+            out_specs=(_full_spec(acc.shape), _full_spec(com.shape),
+                       _full_spec(cm.shape)),
+            out_shape=(jax.ShapeDtypeStruct(acc.shape, acc.dtype),
+                       jax.ShapeDtypeStruct(com.shape, com.dtype),
+                       jax.ShapeDtypeStruct(cm.shape, cm.dtype)),
+            input_output_aliases={3: 0, 4: 1, 5: 2},
+            interpret=interp,
+        )(desc, xs, ms, acc, com, cm)
+
+    return round_fn

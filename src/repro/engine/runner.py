@@ -1,0 +1,66 @@
+"""Device-resident plan execution: one jitted host dispatch per plan.
+
+``execute_plan`` runs a :class:`~repro.engine.descriptors.TaskTable`
+through a family round function (``repro.engine.megakernel``) as a single
+jitted ``lax.fori_loop`` over rounds — the whole plan becomes one XLA
+program with zero host transitions between rounds, and the state buffers
+are donated so execution is in-place end to end (DESIGN.md §Engine).
+
+``fuse_rounds=True`` additionally collapses every round slab into one —
+one megakernel launch for the *entire plan* (a single copy-in/copy-out of
+the state).  This is legal precisely because slab row order already
+serializes rounds and the megakernel walks rows sequentially; it is the
+fastest mode whenever the family state fits the kernel's memory budget.
+
+On CPU runtimes the megakernels run in Pallas interpret mode, so this is
+also the CI path; buffer donation is only requested on backends that
+implement it (donation on CPU is a no-op that warns).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .descriptors import TaskTable
+
+RoundFn = Callable[[jnp.ndarray, Tuple, Tuple], Tuple]
+
+ENGINE_DISPATCHES_PER_PLAN = 1     # the whole point — see BENCH_engine.json
+
+
+def _loop(round_fn: RoundFn, desc, statics, buffers):
+    def body(r, bufs):
+        return round_fn(desc[r], statics, bufs)
+    return jax.lax.fori_loop(0, desc.shape[0], body, buffers)
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=3)
+def _run_donating(round_fn, desc, statics, buffers):
+    return _loop(round_fn, desc, statics, buffers)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_plain(round_fn, desc, statics, buffers):
+    return _loop(round_fn, desc, statics, buffers)
+
+
+def execute_plan(tables: TaskTable, round_fn: RoundFn,
+                 statics: Sequence, buffers: Sequence, *,
+                 fuse_rounds: bool = False,
+                 donate: Optional[bool] = None) -> Tuple:
+    """Execute a lowered task table.  ``statics`` are read-only family
+    inputs (may be empty); ``buffers`` are the mutable state arrays,
+    threaded round to round and returned.  ``round_fn`` must be a stable
+    object (the megakernel factories are lru-cached) so repeated calls hit
+    the jit cache."""
+    desc = jnp.asarray(tables.desc)
+    if fuse_rounds:
+        desc = desc.reshape(1, -1, desc.shape[-1])
+    if donate is None:
+        donate = jax.default_backend() in ("tpu", "gpu")
+    run = _run_donating if donate else _run_plain
+    return run(round_fn, desc, tuple(statics), tuple(buffers))

@@ -31,8 +31,10 @@ from .ref import DEFAULT_EPS
 TILE_I = 128
 
 
-def _acc_block(xi, xj, mj_row, eps):
-    """xi: (3,TI), xj: (3,NJ), mj_row: (1,NJ) → acc (3,TI) and w (TI,NJ)."""
+def acc_block(xi, xj, mj_row, eps):
+    """xi: (3,TI), xj: (3,NJ), mj_row: (1,NJ) → displacement planes and the
+    m_j/r³ weight matrix; shared by the per-task kernels here and the
+    engine megakernel (repro.engine.megakernel, DESIGN.md §Engine)."""
     ti = xi.shape[1]
     nj = xj.shape[1]
     dx0 = xj[0].reshape(1, nj) - xi[0].reshape(ti, 1)
@@ -46,7 +48,7 @@ def _acc_block(xi, xj, mj_row, eps):
 
 def _pair_kernel(xi_ref, xj_ref, mj_ref, out_ref, *, eps):
     xi = xi_ref[...]
-    dx0, dx1, dx2, w = _acc_block(xi, xj_ref[...], mj_ref[...], eps)
+    dx0, dx1, dx2, w = acc_block(xi, xj_ref[...], mj_ref[...], eps)
     out_ref[...] = jnp.stack([
         jnp.sum(dx0 * w, axis=1),
         jnp.sum(dx1 * w, axis=1),
@@ -59,7 +61,7 @@ def _self_kernel(x_ref, m_ref, xi_ref, out_ref, *, eps):
     ti = xi_ref.shape[1]
     nj = x_ref.shape[1]
     xi = xi_ref[...]
-    dx0, dx1, dx2, w = _acc_block(xi, x_ref[...], m_ref[...], eps)
+    dx0, dx1, dx2, w = acc_block(xi, x_ref[...], m_ref[...], eps)
     gi = i * ti + jax.lax.broadcasted_iota(jnp.int32, (ti, 1), 0)
     gj = jax.lax.broadcasted_iota(jnp.int32, (1, nj), 1)
     w = jnp.where(gi == gj, jnp.zeros_like(w), w)   # exclude self-pairs

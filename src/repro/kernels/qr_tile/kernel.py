@@ -10,6 +10,11 @@ dominate the flop count (O(N²) applies vs O(N) factorizations per level),
 which is exactly why this decomposition suits the TPU.
 
 Validated against ``ref.py`` in interpret mode (tests/test_kernels_qr.py).
+
+The numerical bodies are exposed as pure value-level functions
+(``geqrf_math`` / ``tsqrf_math`` / ``apply_qt_math`` / ``apply_tsqt_math``)
+so the per-op kernels here and the fused engine megakernel
+(``repro.engine.megakernel``, DESIGN.md §Engine) trace the exact same math.
 """
 
 from __future__ import annotations
@@ -40,9 +45,10 @@ def _householder(alpha, sigma2, dtype):
     return beta, tau, inv
 
 
-def _geqrf_kernel(a_ref, rv_ref, tau_ref, t_ref):
-    b = a_ref.shape[0]
-    dtype = a_ref.dtype
+def geqrf_math(a0):
+    """Value-level DGEQRF body: (b,b) tile → (RV, taus (1,b), T)."""
+    b = a0.shape[0]
+    dtype = a0.dtype
     rows, cols = _iotas(b)
 
     def body(j, carry):
@@ -69,18 +75,24 @@ def _geqrf_kernel(a_ref, rv_ref, tau_ref, t_ref):
         taus = jnp.where(cols == j, tau, taus)
         return a, v_acc, taus, t
 
-    a0 = a_ref[...]
     z = jnp.zeros((b, b), dtype)
     a, _, taus, t = jax.lax.fori_loop(
         0, b, body, (a0, z, jnp.zeros((1, b), dtype), z))
-    rv_ref[...] = a
+    return a, taus, t
+
+
+def _geqrf_kernel(a_ref, rv_ref, tau_ref, t_ref):
+    rv, taus, t = geqrf_math(a_ref[...])
+    rv_ref[...] = rv
     tau_ref[...] = taus
     t_ref[...] = t
 
 
-def _tsqrf_kernel(r_ref, a_ref, r_out_ref, v2_ref, tau_ref, t_ref):
-    b = r_ref.shape[0]
-    dtype = r_ref.dtype
+def tsqrf_math(r0, a0):
+    """Value-level DTSQRF body: (R tile, rectangular tile) → (R', V2,
+    taus (1,b), T)."""
+    b = r0.shape[0]
+    dtype = r0.dtype
     rows, cols = _iotas(b)
 
     def body(j, carry):
@@ -108,29 +120,44 @@ def _tsqrf_kernel(r_ref, a_ref, r_out_ref, v2_ref, tau_ref, t_ref):
 
     z = jnp.zeros((b, b), dtype)
     r, _, v2, taus, t = jax.lax.fori_loop(
-        0, b, body, (r_ref[...], a_ref[...], z, jnp.zeros((1, b), dtype), z))
+        0, b, body, (r0, a0, z, jnp.zeros((1, b), dtype), z))
+    return r, v2, taus, t
+
+
+def _tsqrf_kernel(r_ref, a_ref, r_out_ref, v2_ref, tau_ref, t_ref):
+    r, v2, taus, t = tsqrf_math(r_ref[...], a_ref[...])
     r_out_ref[...] = r
     v2_ref[...] = v2
     tau_ref[...] = taus
     t_ref[...] = t
 
 
-def _apply_qt_kernel(rv_ref, t_ref, c_ref, out_ref):
-    b = rv_ref.shape[0]
-    dtype = rv_ref.dtype
+def apply_qt_math(rv, t, c):
+    """Value-level DLARFT body: C ← (I - V T Vᵀ)ᵀ C with V packed below
+    the diagonal of ``rv``."""
+    b = rv.shape[0]
+    dtype = rv.dtype
     rows, cols = _iotas(b)
-    v = jnp.where(rows > cols, rv_ref[...], jnp.zeros((b, b), dtype))
+    v = jnp.where(rows > cols, rv, jnp.zeros((b, b), dtype))
     v = v + (rows == cols).astype(dtype)
-    c = c_ref[...]
-    out_ref[...] = c - v @ (t_ref[...].T @ (v.T @ c))
+    return c - v @ (t.T @ (v.T @ c))
+
+
+def _apply_qt_kernel(rv_ref, t_ref, c_ref, out_ref):
+    out_ref[...] = apply_qt_math(rv_ref[...], t_ref[...], c_ref[...])
+
+
+def apply_tsqt_math(v2, t, c1, c2):
+    """Value-level DSSRFT body: apply the (I ; V2) block reflector to the
+    stacked (C1 ; C2) pair."""
+    w = t.T @ (c1 + v2.T @ c2)
+    return c1 - w, c2 - v2 @ w
 
 
 def _apply_tsqt_kernel(v2_ref, t_ref, c1_ref, c2_ref, o1_ref, o2_ref):
-    v2 = v2_ref[...]
-    c1, c2 = c1_ref[...], c2_ref[...]
-    w = t_ref[...].T @ (c1 + v2.T @ c2)
-    o1_ref[...] = c1 - w
-    o2_ref[...] = c2 - v2 @ w
+    o1, o2 = apply_tsqt_math(v2_ref[...], t_ref[...], c1_ref[...], c2_ref[...])
+    o1_ref[...] = o1
+    o2_ref[...] = o2
 
 
 def _tile_spec(shape):

@@ -18,6 +18,7 @@ import pathlib
 _HYPOTHESIS_SUITES = [
     "test_core_locks.py",
     "test_core_sched.py",
+    "test_engine_properties.py",
     "test_kernels_flash.py",
     "test_kernels_nbody.py",
     "test_kernels_qr.py",

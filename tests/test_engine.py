@@ -1,0 +1,311 @@
+"""Device-resident engine tests (DESIGN.md §Engine): descriptor-table
+lowering semantics, the fused QR/Barnes-Hut megakernels against their
+sequential/rounds oracles, the single-dispatch runner (incl. whole-plan
+fusion), host-dispatch accounting, and the ThreadedExecutor failure-path
+regression."""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.apps import barneshut as bh
+from repro.apps import qr
+from repro.core import (FLAG_VIRTUAL, BatchSpec, QSched, ThreadedExecutor,
+                        lower)
+
+
+def _noop(tid, data):
+    pass
+
+
+def _identity_registry(types, arg_width=1):
+    """Trivial device lowering: each task encodes to one row
+    ``[type, tid]`` — enough to exercise the table layout."""
+    return {tt: BatchSpec(
+        run_one=_noop,
+        encode=lambda tid, data, tt=tt: [(tt, tid)])
+        for tt in types}
+
+
+class TestDescriptorLowering:
+    def _chain_sched(self):
+        s = QSched()
+        prev = None
+        for i in range(3):
+            t = s.addtask(type=i % 2, data=i, cost=1.0)
+            if prev is not None:
+                s.addunlock(prev, t)
+            prev = t
+        return s
+
+    def test_table_layout_round_structure(self):
+        s = self._chain_sched()
+        plan = lower(s, 1, cache=False)
+        tables = engine.lower_tables(plan, s, _identity_registry((0, 1)),
+                                     arg_width=1, pad_type=9)
+        assert tables.nr_rounds == plan.nr_rounds == 3
+        assert tables.width == 1
+        assert tables.nr_items == 3
+        assert tables.lengths.tolist() == [1, 1, 1]
+        assert tables.offsets.tolist() == [0, 1, 2, 3]
+        # [etype, tid] rows in round order
+        assert tables.desc[:, 0, :].tolist() == [[0, 0], [1, 1], [0, 2]]
+        assert tables.tids[:, 0].tolist() == [0, 1, 2]
+
+    def test_padding_rows_carry_pad_type(self):
+        s = QSched()
+        for i in range(5):           # one wide round
+            s.addtask(type=0, data=i)
+        t = s.addtask(type=0, data=5)
+        s.addunlock(0, t)            # plus one narrow round
+        plan = lower(s, 1, cache=False)
+        tables = engine.lower_tables(plan, s, _identity_registry((0,)),
+                                     arg_width=1, pad_type=7)
+        assert tables.width == 5
+        assert tables.lengths.tolist() == [5, 1]
+        pad = tables.desc[1, 1:, 0]
+        assert (pad == 7).all()
+        assert (tables.tids[1, 1:] == -1).all()
+        assert tables.stats["pad_rows"] == 4
+
+    def test_row_order_mirrors_execute(self):
+        """Rows within a round follow ascending task type then batch
+        order — the host rounds-mode dispatch order."""
+        s = QSched()
+        for i in range(3):
+            s.addtask(type=2, data=i)
+        for i in range(2):
+            s.addtask(type=1, data=i)
+        plan = lower(s, 1, cache=False)
+        tables = engine.lower_tables(plan, s, _identity_registry((1, 2)),
+                                     arg_width=1, pad_type=9)
+        assert tables.desc[0, :, 0].tolist() == [1, 1, 2, 2, 2]
+
+    def test_virtual_tasks_encode_to_nothing(self):
+        s = QSched()
+        s.addtask(type=0, data="a")
+        s.addtask(type=5, data="v", flags=FLAG_VIRTUAL)
+        plan = lower(s, 1, cache=False)
+        tables = engine.lower_tables(plan, s, _identity_registry((0,)),
+                                     arg_width=1, pad_type=9)
+        assert tables.nr_items == 1
+        assert tables.round_tids(0) == [0]
+
+    def test_task_may_expand_to_many_rows(self):
+        s = QSched()
+        s.addtask(type=0, data=3)
+        reg = {0: BatchSpec(
+            run_one=_noop,
+            encode=lambda tid, data: [(0, k) for k in range(data)])}
+        tables = engine.lower_tables(lower(s, 1, cache=False), s, reg,
+                                     arg_width=1, pad_type=9)
+        assert tables.nr_items == 3
+        assert tables.tids[0].tolist() == [0, 0, 0]
+
+    def test_missing_encode_raises(self):
+        s = QSched()
+        s.addtask(type=0)
+        plan = lower(s, 1, cache=False)
+        with pytest.raises(KeyError, match="no BatchSpec"):
+            engine.lower_tables(plan, s, {}, arg_width=1, pad_type=9)
+        with pytest.raises(KeyError, match="no engine "):
+            engine.lower_tables(plan, s, {0: BatchSpec(run_one=_noop)},
+                                arg_width=1, pad_type=9)
+
+    def test_overwide_row_raises(self):
+        s = QSched()
+        s.addtask(type=0)
+        reg = {0: BatchSpec(run_one=_noop,
+                            encode=lambda tid, data: [(0, 1, 2, 3)])}
+        with pytest.raises(ValueError, match="columns"):
+            engine.lower_tables(lower(s, 1, cache=False), s, reg,
+                                arg_width=1, pad_type=9)
+
+    def test_structurally_different_sched_rejected(self):
+        s1, _ = qr.make_qr_graph(4, 4)
+        s2, _ = qr.make_qr_graph(5, 5)
+        plan = lower(s1, 2)
+        with pytest.raises(ValueError):
+            engine.lower_tables(plan, s2, _identity_registry(range(4)),
+                                arg_width=1, pad_type=9)
+
+
+class TestHostDispatchCount:
+    def test_counts_batches_and_singles(self):
+        s = QSched()
+        for i in range(4):
+            s.addtask(type=0, data=i)    # one batched group → 1 dispatch
+        for i in range(2):
+            s.addtask(type=1, data=i)    # run_one only → 2 dispatches
+        plan = lower(s, 1, cache=False)
+        reg = {0: BatchSpec(run_one=_noop, run_batch=lambda t, d: None),
+               1: BatchSpec(run_one=_noop)}
+        assert engine.count_host_dispatches(plan, s, reg) == 3
+
+    def test_qr_dispatch_reduction_floor(self):
+        """Acceptance gate: the engine's single dispatch is ≥5× fewer than
+        the per-round host path on a smoke-size QR plan."""
+        a = jnp.zeros((128, 128), jnp.float32)
+        tiles, mt, nt = qr._split_tiles(a, 32)
+        s, _ = qr.make_qr_graph(mt, nt)
+        plan = lower(s, 4)
+        state = qr._TileState(tiles, "ref")
+        host = engine.count_host_dispatches(plan, s, state.batch_registry())
+        assert host >= 5 * engine.ENGINE_DISPATCHES_PER_PLAN
+
+
+class TestQREngine:
+    def test_engine_matches_sequential(self):
+        a = jnp.asarray(
+            np.random.default_rng(0).standard_normal((96, 96)), jnp.float32)
+        r1, _ = qr.run_qr(a, tile=32, mode="sequential", backend="pallas")
+        r2, _ = qr.run_qr(a, tile=32, mode="engine", nr_queues=4)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2),
+                                   atol=1e-5)
+        # and it is a valid R factor
+        rhs = np.asarray(a).T @ np.asarray(a)
+        r2 = np.asarray(r2)
+        assert np.abs(np.tril(r2, -1)).max() < 1e-4
+        assert np.abs(r2.T @ r2 - rhs).max() / np.abs(rhs).max() < 1e-4
+
+    def test_engine_rectangular_grid(self):
+        """mt ≠ nt exercises the column-major tile-index arithmetic."""
+        a = jnp.asarray(
+            np.random.default_rng(1).standard_normal((160, 96)), jnp.float32)
+        r1, _ = qr.run_qr(a, tile=32, mode="sequential", backend="pallas")
+        r2, _ = qr.run_qr(a, tile=32, mode="engine")
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2),
+                                   atol=1e-5)
+
+    def test_fused_plan_matches_per_round(self):
+        """Whole-plan fusion (one megakernel launch) is row-order
+        equivalent to the per-round fori_loop."""
+        a = jnp.asarray(
+            np.random.default_rng(2).standard_normal((96, 96)), jnp.float32)
+        tiles, mt, nt = qr._split_tiles(a, 32)
+        s, _ = qr.make_qr_graph(mt, nt)
+        plan = lower(s, 4)
+        state = qr._TileState(tiles, "pallas")
+        tables = engine.lower_tables(
+            plan, s, state.batch_registry(),
+            arg_width=engine.QR_ARG_WIDTH, pad_type=engine.QR_NOOP)
+        stack = jnp.stack([tiles[i, j]
+                           for j in range(nt) for i in range(mt)])
+        tmat = jnp.zeros_like(stack)
+        # donate=False: the same buffers are deliberately reused across
+        # the two calls (donation would delete them on TPU/GPU)
+        out1, _ = engine.execute_plan(tables, engine.qr_round_fn(), (),
+                                      (stack, tmat), donate=False)
+        out2, _ = engine.execute_plan(tables, engine.qr_round_fn(), (),
+                                      (stack, tmat), fuse_rounds=True,
+                                      donate=False)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+class TestBHEngine:
+    def test_engine_matches_sequential(self):
+        """Acceptance gate: engine accelerations within the rounds-mode
+        tolerance of the sequential oracle."""
+        rng = np.random.default_rng(3)
+        x, m = rng.random((1200, 3)), rng.random(1200) + 0.5
+        a1, _, _ = bh.solve(x, m, n_max=32, n_task=128, backend="ref",
+                            mode="sequential")
+        a2, _, _ = bh.solve(x, m, n_max=32, n_task=128,
+                            mode="engine", nr_workers=4)
+        num = np.linalg.norm(np.asarray(a1) - np.asarray(a2), axis=0)
+        den = np.linalg.norm(np.asarray(a1), axis=0)
+        assert (num / np.maximum(den, 1e-12)).max() < 1e-4
+
+    def test_engine_matches_rounds(self):
+        rng = np.random.default_rng(5)
+        x, m = rng.random((600, 3)), rng.random(600) + 0.5
+        a1, _, _ = bh.solve(x, m, n_max=32, n_task=128, backend="ref",
+                            mode="rounds", nr_workers=4)
+        a2, _, _ = bh.solve(x, m, n_max=32, n_task=128,
+                            mode="engine", nr_workers=4)
+        num = np.linalg.norm(np.asarray(a1) - np.asarray(a2), axis=0)
+        den = np.linalg.norm(np.asarray(a1), axis=0)
+        assert (num / np.maximum(den, 1e-12)).max() < 1e-4
+
+    def test_engine_coms_match_sequential(self):
+        """The in-kernel COM reduction (leaf blocks + one-hot child
+        gathers) reproduces the host COM pass."""
+        rng = np.random.default_rng(7)
+        x, m = rng.random((400, 3)), rng.random(400) + 0.5
+        _, st_seq, g = bh.solve(x, m, n_max=32, n_task=128, backend="ref",
+                                mode="sequential")
+        st_eng = bh.BHState(g, backend="ref")
+        st_eng.run(mode="engine")
+        for cid in range(len(g.tree.cells)):
+            np.testing.assert_allclose(
+                np.asarray(st_eng.com[cid]), np.asarray(st_seq.com[cid]),
+                rtol=1e-5, atol=1e-6)
+
+
+class TestThreadedExecutorFailure:
+    """Regression (satellite): a worker exception must re-raise out of
+    ``run`` promptly — before the abort flag, the surviving workers spun on
+    the never-draining ``waiting`` counter and ``join`` hung forever, so
+    failures passed silently (or rather, hung) instead of raising."""
+
+    def _run_with_watchdog(self, exc_type, fn):
+        box = {}
+
+        def target():
+            try:
+                fn()
+                box["outcome"] = None
+            except BaseException as e:        # noqa: BLE001 - test capture
+                box["outcome"] = e
+
+        th = threading.Thread(target=target, daemon=True)
+        th.start()
+        th.join(timeout=30.0)
+        assert not th.is_alive(), "ThreadedExecutor.run hung on failure"
+        assert isinstance(box["outcome"], exc_type), box["outcome"]
+        return box["outcome"]
+
+    def test_worker_exception_reraises(self):
+        s = QSched(nr_queues=2)
+        for i in range(50):
+            s.addtask(data=i)
+
+        def fun(ttype, data):
+            if data == 17:
+                raise ValueError("task 17 exploded")
+
+        ex = ThreadedExecutor(s, nr_threads=4)
+        err = self._run_with_watchdog(ValueError, lambda: ex.run(fun))
+        assert "task 17 exploded" in str(err)
+        assert ex.errors and ex.errors[0] is err
+
+    def test_exception_in_dependent_chain(self):
+        """Failure mid-graph (dependents still waiting) must also unblock
+        the pool."""
+        s = QSched(nr_queues=2)
+        prev = None
+        for i in range(10):
+            t = s.addtask(data=i)
+            if prev is not None:
+                s.addunlock(prev, t)
+            prev = t
+
+        def fun(ttype, data):
+            if data == 3:
+                raise RuntimeError("chain broke")
+
+        ex = ThreadedExecutor(s, nr_threads=3)
+        self._run_with_watchdog(RuntimeError, lambda: ex.run(fun))
+
+    def test_errors_cleared_between_runs(self):
+        s = QSched()
+        for i in range(5):
+            s.addtask(data=i)
+        ex = ThreadedExecutor(s, nr_threads=2)
+        with pytest.raises(ValueError):
+            ex.run(lambda ty, d: (_ for _ in ()).throw(ValueError("x")))
+        ex.run(lambda ty, d: None)       # second run succeeds cleanly
+        assert ex.errors == []

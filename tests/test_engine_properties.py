@@ -1,0 +1,126 @@
+"""Conflict-freedom as a property (hypothesis): over randomized task
+forests — random dependency DAGs locking random resources in random
+resource forests — no ``ExecutionPlan`` round and no engine descriptor
+slab ever co-schedules two tasks whose locked resource subtrees overlap.
+
+This is the invariant everything downstream leans on: the rounds mode may
+dispatch a round's batches in any order, and the engine megakernel walks a
+slab sequentially but could legally walk it in parallel, precisely because
+no two tasks of a slab can touch the same resource subtree (DESIGN.md
+§Engine)."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import engine
+from repro.core import FLAG_VIRTUAL, BatchSpec, QSched, lower
+
+N_TYPES = 3
+PAD = N_TYPES
+
+
+@st.composite
+def task_forests(draw):
+    """A QSched over a random resource *forest* (each resource's parent is
+    an earlier resource or none) with random dependencies (i → j, i < j)
+    and random per-task lock sets that avoid self-unsatisfiable
+    ancestor/descendant combinations (those can never be acquired by one
+    task and are rejected at runtime, not a scheduling property)."""
+    n = draw(st.integers(1, 24))
+    nres = draw(st.integers(1, 8))
+    s = QSched(nr_queues=draw(st.integers(1, 4)))
+    parents = []
+    for r in range(nres):
+        parent = draw(st.integers(-1, r - 1)) if r else -1
+        parents.append(parent)
+        s.addres(owner=draw(st.integers(-1, 3)), parent=parent)
+
+    def chain(r):
+        out = {r}
+        while parents[r] != -1:
+            r = parents[r]
+            out.add(r)
+        return out
+
+    for i in range(n):
+        flags = FLAG_VIRTUAL if draw(st.booleans()) and i % 5 == 0 else 0
+        s.addtask(type=draw(st.integers(0, N_TYPES - 1)),
+                  data=i, cost=draw(st.floats(0.1, 10.0)), flags=flags)
+    for j in range(1, n):
+        for i in draw(st.lists(st.integers(0, j - 1), max_size=3,
+                               unique=True)):
+            s.addunlock(i, j)
+    for i in range(n):
+        taken = set()
+        for r in draw(st.lists(st.integers(0, nres - 1), max_size=3,
+                               unique=True)):
+            if any(r in chain(q) or q in chain(r) for q in taken):
+                continue
+            taken.add(r)
+            s.addlock(i, r)
+    return s, parents
+
+
+def _assert_subtrees_disjoint(sched, parents, tids, what):
+    """No resource locked twice, and no locked resource lies on another
+    locked resource's ancestor chain — the paper's §3.2 hierarchical
+    exclusion, stated over a whole round."""
+    locks_of = sched.graph.locks_list
+    locked = set()
+    for tid in tids:
+        for r in locks_of[tid]:
+            assert r not in locked, f"{what}: resource {r} locked twice"
+            locked.add(r)
+    for r in locked:
+        u = parents[r]
+        while u != -1:
+            assert u not in locked, \
+                f"{what}: resource {r} and ancestor {u} both locked"
+            u = parents[u]
+
+
+@given(task_forests(), st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_plan_rounds_and_engine_slabs_conflict_free(forest, nr_lanes):
+    sched, parents = forest
+    plan = lower(sched, nr_lanes, cache=False)
+    registry = {tt: BatchSpec(
+        run_one=lambda tid, data: None,
+        encode=lambda tid, data, tt=tt: [(tt, tid)])
+        for tt in range(N_TYPES)}
+    tables = engine.lower_tables(plan, sched, registry,
+                                 arg_width=1, pad_type=PAD)
+    assert tables.nr_rounds == plan.nr_rounds
+
+    flags = sched._tflags
+    seen = []
+    for r, rnd in enumerate(plan.rounds):
+        _assert_subtrees_disjoint(sched, parents, rnd.tids, f"round {r}")
+        slab_tids = tables.round_tids(r)
+        _assert_subtrees_disjoint(sched, parents, set(slab_tids),
+                                  f"slab {r}")
+        # a slab holds exactly its round's non-virtual tasks
+        expect = sorted(t for t in rnd.tids if not flags[t] & FLAG_VIRTUAL)
+        assert sorted(set(slab_tids)) == expect
+        seen += slab_tids
+    # every non-virtual task encoded exactly once (1 row/task registry)
+    assert sorted(seen) == [t for t in range(sched.nr_tasks)
+                            if not flags[t] & FLAG_VIRTUAL]
+
+
+@given(task_forests())
+@settings(max_examples=30, deadline=None)
+def test_slab_pads_are_noops(forest):
+    sched, _ = forest
+    plan = lower(sched, 2, cache=False)
+    registry = {tt: BatchSpec(
+        run_one=lambda tid, data: None,
+        encode=lambda tid, data, tt=tt: [(tt, tid)])
+        for tt in range(N_TYPES)}
+    tables = engine.lower_tables(plan, sched, registry,
+                                 arg_width=1, pad_type=PAD)
+    for r in range(tables.nr_rounds):
+        w = int(tables.lengths[r])
+        assert (tables.desc[r, w:, 0] == PAD).all()
+        assert (tables.tids[r, w:] == -1).all()
+        assert (tables.desc[r, :w, 0] < PAD).all()
