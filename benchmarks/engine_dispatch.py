@@ -1,6 +1,7 @@
 """Engine dispatch benchmark: per-round host dispatch vs the fused
-device-resident engine (DESIGN.md §Engine).  Writes ``BENCH_engine.json``
-at the repo root.
+device-resident engine (DESIGN.md §Engine), for all three task families
+(QR, Barnes-Hut, pipeline F/B/U).  Writes ``BENCH_engine.json`` at the
+repo root.
 
 Two figures of merit per family:
 
@@ -25,10 +26,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import jax.random
+
 from repro import engine
 from repro.apps import barneshut as bh
 from repro.apps import qr
 from repro.core import lower
+from repro.pipeline import lower_pipeline_plan
+from repro.pipeline.exec import (_PipeRunner, dense_stage, mse_loss,
+                                 pipelined_value_and_grad_plan)
 
 from .common import FULL, SMOKE, emit
 
@@ -140,8 +146,52 @@ def bench_bh():
     }
 
 
+def bench_pipeline():
+    """Pipeline F/B/U family (ISSUE 4): host dispatches of the per-task
+    path vs the single-dispatch engine, plus end-to-end value-and-grad
+    wall time on the canonical dense family."""
+    S, M = (8, 64) if FULL else ((4, 16) if SMOKE else (4, 32))
+    bt, dim = 4, 32
+    key = jax.random.PRNGKey(0)
+    params = [{"w": jax.random.normal(jax.random.fold_in(key, k),
+                                      (dim, dim)) * 0.3,
+               "b": jnp.zeros((dim,))} for k in range(S)]
+    micro = [{"x": jax.random.normal(jax.random.fold_in(key, 100 + m),
+                                     (bt, dim)),
+              "y": jax.random.normal(jax.random.fold_in(key, 200 + m),
+                                     (bt, dim))} for m in range(M)]
+    runner = _PipeRunner([dense_stage] * S, mse_loss, params, micro)
+    sched, _, plan = lower_pipeline_plan(S, M, per_stage_window=True)
+    host_dispatches = engine.count_host_dispatches(plan, sched,
+                                                   runner.registry())
+
+    def run_mode(mode):
+        def timed(_):
+            out = pipelined_value_and_grad_plan(
+                [dense_stage] * S, mse_loss, params, micro, mode=mode)
+            jax.block_until_ready(out)
+            return out
+        timed(None)                       # warmup (engine: compile)
+        return _best(lambda: None, timed, repeat=3)[0]
+
+    t_rounds = run_mode("rounds")
+    t_engine = run_mode("engine")
+    return {
+        "graph": f"pipeline_S{S}_M{M}",
+        "tasks": sched.nr_tasks,
+        "rounds": plan.nr_rounds,
+        "host_dispatches": {
+            "per_round": host_dispatches,
+            "engine": engine.ENGINE_DISPATCHES_PER_PLAN,
+        },
+        "dispatch_reduction": host_dispatches
+        / engine.ENGINE_DISPATCHES_PER_PLAN,
+        "execute_s": {"per_round": t_rounds, "engine": t_engine},
+    }
+
+
 def main() -> None:
-    out = {"qr": bench_qr(), "bh": bench_bh()}
+    out = {"qr": bench_qr(), "bh": bench_bh(), "pipeline": bench_pipeline()}
     q = out["qr"]
     emit("engine_qr_per_round_us", q["execute_s"]["per_round"] * 1e6,
          f"dispatches={q['host_dispatches']['per_round']}")
@@ -156,6 +206,11 @@ def main() -> None:
     emit("engine_bh_engine_us", b["execute_s"]["engine"] * 1e6,
          f"tasks={b['tasks']} rounds={b['rounds']} "
          f"dispatch_reduction={b['dispatch_reduction']:.0f}x")
+    p = out["pipeline"]
+    emit("engine_pipe_engine_us", p["execute_s"]["engine"] * 1e6,
+         f"tasks={p['tasks']} rounds={p['rounds']} "
+         f"dispatches={p['host_dispatches']['per_round']} "
+         f"dispatch_reduction={p['dispatch_reduction']:.0f}x")
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
     path.write_text(json.dumps(out, indent=2) + "\n")
     emit("engine_json", 0, str(path))

@@ -28,7 +28,8 @@ COM interactions (leaves(a) ← com(b), leaves(b) ← com(a)); a pair with at
 least one unsplit side contributes a direct block.  This is exact: every
 directed particle pair is covered exactly once (tested).
 
-Execution modes (``BHState.run`` / ``solve``):
+Execution modes (``BHState.run`` / ``solve``; all dispatched through the
+core backend registry, ``core/backends.py`` — no mode branching here):
   * ``sequential`` — core SequentialExecutor drains the scheduler in
     priority order (functional jnp accumulation, traceable);
   * ``rounds``     — the shared ExecutionPlan lowering: bulk-synchronous
@@ -53,8 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import engine
-from repro.core import (BatchSpec, QSched, SequentialExecutor,
-                        ThreadedExecutor, lower)
+from repro.core import (BatchSpec, EngineHooks, QSched, get_backend,
+                        run_plan)
 from repro.kernels.nbody import ops
 from repro.kernels.nbody.ref import DEFAULT_EPS
 
@@ -485,58 +486,65 @@ class BHState:
         return {t: BatchSpec(run_one=one(t), encode=enc[t])
                 for t in (T_SELF, T_PAIR, T_PC, T_COM)}
 
-    def _run_engine(self, nr_workers: int) -> None:
-        """Lower the plan to descriptor tables and execute the whole solve
-        as one jitted dispatch of the fused megakernel (DESIGN.md
-        §Engine), then scatter the padded leaf accelerations back."""
-        assert self.accumulate == "jnp", (
-            "engine mode bypasses host accumulation; use accumulate='jnp'")
-        leaves, _, P, xs, ms = self._engine_layout()
-        tree = self.g.tree
-        ncells = len(tree.cells)
-        plan = lower(self.g.sched, nr_lanes=max(nr_workers, 1))
-        tables = engine.lower_tables(
-            plan, self.g.sched, self.batch_registry(),
-            arg_width=engine.BH_ARG_WIDTH, pad_type=engine.BH_NOOP)
-        statics = (jnp.asarray(xs), jnp.asarray(ms))
-        buffers = (jnp.zeros((len(leaves), 3, P), jnp.float32),
-                   jnp.zeros((ncells + 1, 3), jnp.float32),
-                   jnp.zeros((ncells + 1, 1), jnp.float32))
-        acc, com, cmass = engine.execute_plan(
-            tables, engine.bh_round_fn(float(self.eps)), statics, buffers)
-        acc_np = np.zeros((3, tree.n), np.float32)
-        acc_host = np.asarray(acc)
-        for k, cid in enumerate(leaves):
-            c = tree.cells[cid]
-            acc_np[:, c.start:c.start + c.count] = acc_host[k, :, :c.count]
-        self.acc = jnp.asarray(acc_np)
-        # host numpy rows (one transfer), not ncells tiny device arrays
-        com_host, cm_host = np.asarray(com), np.asarray(cmass)
-        for cid in range(ncells):
-            self.com[cid] = com_host[cid]
-            self.cmass[cid] = float(cm_host[cid, 0])
+    def engine_hooks(self) -> EngineHooks:
+        """Engine-family hooks for the backend registry (DESIGN.md
+        §Engine): the fused BH megakernel over zero-mass-padded leaf
+        blocks; writeback scatters the padded leaf accelerations back.
+        The leaf layout resolves lazily, so building the hooks for a
+        host-only run costs nothing."""
+        def statics():
+            _, _, _, xs, ms = self._engine_layout()
+            return jnp.asarray(xs), jnp.asarray(ms)
+
+        def buffers():
+            leaves, _, P, _, _ = self._engine_layout()
+            ncells = len(self.g.tree.cells)
+            return (jnp.zeros((len(leaves), 3, P), jnp.float32),
+                    jnp.zeros((ncells + 1, 3), jnp.float32),
+                    jnp.zeros((ncells + 1, 1), jnp.float32))
+
+        def writeback(out):
+            acc, com, cmass = out
+            leaves = self._engine_layout()[0]
+            tree = self.g.tree
+            ncells = len(tree.cells)
+            acc_np = np.zeros((3, tree.n), np.float32)
+            acc_host = np.asarray(acc)
+            for k, cid in enumerate(leaves):
+                c = tree.cells[cid]
+                acc_np[:, c.start:c.start + c.count] = \
+                    acc_host[k, :, :c.count]
+            self.acc = jnp.asarray(acc_np)
+            # host numpy rows (one transfer), not ncells tiny device arrays
+            com_host, cm_host = np.asarray(com), np.asarray(cmass)
+            for cid in range(ncells):
+                self.com[cid] = com_host[cid]
+                self.cmass[cid] = float(cm_host[cid, 0])
+
+        return EngineHooks(
+            arg_width=engine.BH_ARG_WIDTH, pad_type=engine.BH_NOOP,
+            round_fn=engine.bh_round_fn(float(self.eps)), statics=statics,
+            buffers=buffers, writeback=writeback)
 
     # -- drivers ---------------------------------------------------------------
     def run(self, mode: str = "sequential", nr_workers: int = 1) -> None:
-        s = self.g.sched
-        if mode == "sequential":
-            SequentialExecutor(s).run(self.exec_task, pass_tid=True)
-        elif mode == "rounds":
-            # conflict-free rounds via the shared ExecutionPlan lowering —
-            # the SPMD execution of the BH graph (accumulation order differs
-            # from `sequential` only by floating-point reassociation).
-            plan = lower(s, nr_lanes=max(nr_workers, 1))
-            plan.execute(s, self.batch_registry())
-        elif mode == "engine":
-            self._run_engine(nr_workers)
-        elif mode == "threaded":
-            assert self.accumulate == "numpy", (
-                "threaded mode requires accumulate='numpy'")
+        """Execute on any registered backend.  Accumulation-mode
+        preconditions key off backend *capabilities*, not mode names:
+        concurrent backends mutate a shared numpy buffer under the real
+        resource locks (the paper's conflict-exclusion claim), while the
+        device-resident engine bypasses host accumulation entirely."""
+        be = get_backend(mode)
+        if be.concurrent:
             # NOTE: no global lock — the resource locks acquired by gettask
             # are what serialises overlapping writes.
-            ThreadedExecutor(s, nr_workers).run(self.exec_task, pass_tid=True)
-        else:
-            raise ValueError(mode)
+            assert self.accumulate == "numpy", (
+                "concurrent backends require accumulate='numpy'")
+        if be.device_resident:
+            assert self.accumulate == "jnp", (
+                "the engine bypasses host accumulation; use accumulate='jnp'")
+        run_plan(self.g.sched, self.batch_registry(), mode,
+                 nr_workers=max(nr_workers, 1),
+                 engine=self.engine_hooks())
 
 
 

@@ -22,7 +22,8 @@ numpy index arrays through the scheduler's bulk API (``addtasks`` /
 ``make_qr_graph_loop`` and the two are asserted stream-identical in
 ``tests/test_plan.py``.
 
-Execution modes:
+Execution modes (all dispatched through the core backend registry,
+``core/backends.py`` — this module contains no mode branching):
   * ``sequential`` — SequentialExecutor drains the scheduler in priority
     order while tracing the tile kernels; wrap in ``jax.jit`` for a single
     XLA program ordered by the QuickSched schedule.
@@ -47,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import engine
-from repro.core import BatchSpec, QSched, SequentialExecutor, lower
+from repro.core import BatchSpec, EngineHooks, QSched, lower, run_plan
 from repro.kernels.qr_tile import ops
 
 T_GEQRF, T_LARFT, T_TSQRF, T_SSRFT = range(4)
@@ -347,45 +348,39 @@ class _TileState:
                                encode=enc_ssrft),
         }
 
-    def run_engine(self, plan, sched) -> None:
-        """Execute a lowered plan on the device engine: stack the tile dict
-        into a (ntiles, b, b) buffer (column-major tile index, matching the
-        resource ids), lower descriptor tables through the same registry,
-        run the fused megakernel rounds as one jitted dispatch, and scatter
+    def engine_hooks(self) -> EngineHooks:
+        """Engine-family hooks for the backend registry: stack the tile
+        dict into a (ntiles, b, b) buffer (column-major tile index,
+        matching the resource ids), run the fused QR megakernel, scatter
         the tiles back."""
         mt, nt = self.mt, self.nt
-        tables = engine.lower_tables(
-            plan, sched, self.batch_registry(),
-            arg_width=engine.QR_ARG_WIDTH, pad_type=engine.QR_NOOP)
-        tiles = jnp.stack([self.tiles[i, j]
-                           for j in range(nt) for i in range(mt)])
-        tmat = jnp.zeros_like(tiles)
-        tiles, _ = engine.execute_plan(
-            tables, engine.qr_round_fn(), (), (tiles, tmat))
-        for j in range(nt):
-            for i in range(mt):
-                self.tiles[i, j] = tiles[j * mt + i]
+
+        def buffers():
+            tiles = jnp.stack([self.tiles[i, j]
+                               for j in range(nt) for i in range(mt)])
+            return tiles, jnp.zeros_like(tiles)
+
+        def writeback(out):
+            tiles, _ = out
+            for j in range(nt):
+                for i in range(mt):
+                    self.tiles[i, j] = tiles[j * mt + i]
+
+        return EngineHooks(
+            arg_width=engine.QR_ARG_WIDTH, pad_type=engine.QR_NOOP,
+            round_fn=engine.qr_round_fn(), statics=tuple,
+            buffers=buffers, writeback=writeback)
 
 
 def run_qr(a: jnp.ndarray, tile: int = 32, mode: str = "sequential",
            backend: str = "pallas", nr_queues: int = 1):
-    """Compute the R factor of ``a`` with the QuickSched task graph.
-    Returns (R, sched)."""
+    """Compute the R factor of ``a`` with the QuickSched task graph on any
+    registered execution backend.  Returns (R, sched)."""
     tiles, mt, nt = _split_tiles(a, tile)
     sched, _ = make_qr_graph(mt, nt, nr_queues=nr_queues)
     state = _TileState(tiles, backend)
-    if mode == "sequential":
-        SequentialExecutor(sched).run(state.exec_task)
-    elif mode == "rounds":
-        plan = lower(sched, nr_lanes=max(nr_queues, 1))
-        plan.execute(sched, state.batch_registry())
-    elif mode == "engine":
-        plan = lower(sched, nr_lanes=max(nr_queues, 1))
-        state.run_engine(plan, sched)
-    elif mode == "threaded":
-        sched.run_threaded(nr_queues, state.exec_task)
-    else:
-        raise ValueError(mode)
+    run_plan(sched, state.batch_registry(), mode,
+             nr_workers=max(nr_queues, 1), engine=state.engine_hooks())
     r = _assemble_r(state.tiles, mt, nt, tile, a.dtype)
     return r, sched
 

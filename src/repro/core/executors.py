@@ -16,9 +16,22 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, List
+from typing import Any, Callable, List, Mapping
 
 from .graph import FLAG_VIRTUAL, QSched
+
+
+def registry_fun(registry: Mapping[int, Any]) -> Callable[[int, Any, int], None]:
+    """Adapt a BatchSpec registry into the ``fun(type, data, tid)`` shape
+    the executors call: each task dispatches to its type's ``run_one``.
+    This is how the sequential/threaded backends share the exact same
+    per-type task bodies as the rounds/engine paths (core.backends)."""
+    def fun(ttype: int, data: Any, tid: int) -> None:
+        spec = registry.get(ttype)
+        if spec is None:
+            raise KeyError(f"no BatchSpec registered for task type {ttype}")
+        spec.run_one(tid, data)
+    return fun
 
 
 class ThreadedExecutor:
@@ -74,6 +87,11 @@ class ThreadedExecutor:
                 f"{self.sched.waiting} tasks unexecuted (deadlock?)")
         assert self.sched.lockmgr.all_free(), "resources left locked"
 
+    def run_registry(self, registry: Mapping[int, Any]) -> None:
+        """Drain the scheduler dispatching each task to its type's
+        ``BatchSpec.run_one`` (the backend-registry entry point)."""
+        self.run(registry_fun(registry), pass_tid=True)
+
 
 class SequentialExecutor:
     """Drain the scheduler with one worker.  Because tasks run in the
@@ -105,3 +123,8 @@ class SequentialExecutor:
             order.append(tid)
             s.done(tid)
         return order
+
+    def run_registry(self, registry: Mapping[int, Any]) -> List[int]:
+        """Drain the scheduler dispatching each task to its type's
+        ``BatchSpec.run_one`` (the backend-registry entry point)."""
+        return self.run(registry_fun(registry), pass_tid=True)

@@ -143,6 +143,18 @@ class ExecutionPlan:
                     for t in tids:
                         run_one(t, datas[t])
 
+    def run(self, sched: QSched, registry: Mapping[int, "BatchSpec"],
+            backend: str = "rounds", *, nr_workers: int = 1,
+            engine: Any = None) -> None:
+        """Execute this plan on a registered execution backend
+        (``core.backends``): ``rounds`` dispatches the typed batches on
+        the host, ``engine`` ships descriptor tables to the device
+        megakernel, ``sequential``/``threaded`` drain the scheduler
+        directly (the plan is ignored but capability-checked)."""
+        from .backends import run_plan        # late: backends imports plan
+        run_plan(sched, registry, backend, nr_workers=nr_workers,
+                 engine=engine, plan=self)
+
 
 def lower(sched: QSched, nr_lanes: int,
           max_tasks_per_round: Optional[int] = None,

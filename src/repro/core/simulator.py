@@ -117,6 +117,39 @@ def simulate(sched: QSched, nr_workers: int, overhead: float = 0.0,
     )
 
 
+def replay_round_times(sched: QSched, plan, round_times,
+                       nr_workers: int = 1, overhead: float = 0.0) -> SimResult:
+    """Validate the makespan model against measured engine rounds
+    (ROADMAP: simulator validation, the paper's Fig 8/13 methodology).
+
+    Each measured per-round time (``engine.measure_round_times``) is
+    distributed over that round's tasks in proportion to their static
+    costs, fed back through ``set_costs`` — the paper's cost-feedback
+    loop — and the discrete-event simulator replays the schedule.  With
+    ``nr_workers=1`` the predicted makespan is the additive round model
+    (Σ round times); with more workers it is the model's prediction of
+    what lane parallelism would buy.  Costs are restored afterwards so
+    the scheduler (and the plan cache keyed on its hash) is unchanged."""
+    if len(round_times) != plan.nr_rounds:
+        raise ValueError(
+            f"{len(round_times)} round times for a {plan.nr_rounds}-round "
+            f"plan")
+    old_costs = list(sched._tcost)
+    costs = list(old_costs)
+    for rnd, rt in zip(plan.rounds, round_times):
+        share = sum(old_costs[t] for t in rnd.tids)
+        for t in rnd.tids:
+            costs[t] = (rt * old_costs[t] / share if share > 0
+                        else rt / len(rnd.tids))
+    try:
+        sched.set_costs(costs)
+        sched.prepare()
+        return simulate(sched, nr_workers, overhead=overhead)
+    finally:
+        sched.set_costs(old_costs)
+        sched.prepare()
+
+
 def scaling_curve(make_sched, worker_counts, overhead: float = 0.0):
     """Run ``simulate`` for each worker count; ``make_sched(n)`` must return
     a fresh prepared QSched with n queues.  Returns list of

@@ -10,16 +10,20 @@ plan instead of one per task/batch per round.  DESIGN.md §Engine.
 from .descriptors import TaskTable, count_host_dispatches, lower_tables
 from .megakernel import (BH_ARG_WIDTH, BH_COM_INNER, BH_COM_LEAF,
                          BH_MAX_CHILDREN, BH_NOOP, BH_PC, BH_PP, BH_SELF,
+                         PIPE_ARG_WIDTH, PIPE_B, PIPE_F, PIPE_NOOP, PIPE_U,
                          QR_ARG_WIDTH, QR_GEQRF, QR_LARFT, QR_NOOP,
-                         QR_SSRFT, QR_TSQRF, bh_round_fn, qr_round_fn)
-from .runner import ENGINE_DISPATCHES_PER_PLAN, execute_plan
+                         QR_SSRFT, QR_TSQRF, bh_round_fn, pipe_round_fn,
+                         qr_round_fn)
+from .runner import (ENGINE_DISPATCHES_PER_PLAN, execute_plan,
+                     measure_round_times)
 
 __all__ = [
     "TaskTable", "lower_tables", "count_host_dispatches",
-    "qr_round_fn", "bh_round_fn", "execute_plan",
-    "ENGINE_DISPATCHES_PER_PLAN",
+    "qr_round_fn", "bh_round_fn", "pipe_round_fn", "execute_plan",
+    "measure_round_times", "ENGINE_DISPATCHES_PER_PLAN",
     "QR_GEQRF", "QR_LARFT", "QR_TSQRF", "QR_SSRFT", "QR_NOOP",
     "QR_ARG_WIDTH",
     "BH_COM_LEAF", "BH_COM_INNER", "BH_SELF", "BH_PP", "BH_PC", "BH_NOOP",
     "BH_ARG_WIDTH", "BH_MAX_CHILDREN",
+    "PIPE_F", "PIPE_B", "PIPE_U", "PIPE_NOOP", "PIPE_ARG_WIDTH",
 ]

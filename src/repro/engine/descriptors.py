@@ -4,10 +4,13 @@
 into a :class:`TaskTable` — per-round, padded integer descriptor slabs plus
 round offsets/lengths — by asking the same ``BatchSpec`` registry that
 drives the host round executor for each task's *device* encoding
-(``BatchSpec.encode``).  QR, Barnes-Hut and any future family (the pipeline
-synthesizer) all lower through this one path; what differs per family is
-only the encoder and the megakernel that interprets the rows
-(``repro.engine.megakernel``).  Layout and invariants: DESIGN.md §Engine.
+(``BatchSpec.encode``).  QR, Barnes-Hut and the pipeline F/B/U synthesizer
+all lower through this one path; what differs per family is only the
+encoder and the megakernel that interprets the rows
+(``repro.engine.megakernel``).  The ``engine`` entry of the execution
+backend registry (``core/backends.py``, DESIGN.md §Backends) drives this
+lowering for any family whose registry carries encoders plus
+``EngineHooks``.  Layout and invariants: DESIGN.md §Engine.
 
 A descriptor row is ``[engine_type, arg0, ..., arg{A-1}]`` (int32).  One
 *task* may encode to several rows (Barnes-Hut tasks expand into their

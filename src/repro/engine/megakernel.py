@@ -1,6 +1,7 @@
 """Fused-round Pallas megakernels: one kernel launch per round per family.
 
-Each task *family* (tiled QR, Barnes-Hut) gets one Pallas kernel that takes
+Each task *family* (tiled QR, Barnes-Hut, the pipeline F/B/U synthesizer)
+gets one Pallas kernel that takes
 a round's descriptor slab and the family's resident state buffers, walks
 the slab with an in-kernel ``fori_loop`` and branches on the engine type of
 each row with ``lax.switch`` (exllamav3-style type fusion) — replacing the
@@ -54,6 +55,12 @@ QR_ARG_WIDTH = 3       # rows: [etype, slot0, slot1, slot2] (tile indices)
 BH_MAX_CHILDREN = 8    # octree fan-out; COM_INNER rows carry 8 child cells
 # and ragged PC source lists chunk into rows of 8 cells (pad = zero-mass)
 BH_ARG_WIDTH = 1 + BH_MAX_CHILDREN   # rows: [etype, write, a0..a7]
+
+# Pipeline F/B/U engine types; PIPE_NOOP pads.  Rows:
+# [etype, stage, micro, in_slot, out_slot, first, last] where the slots are
+# flat (stage, micro) indices into the stacked activation/cotangent slabs.
+PIPE_F, PIPE_B, PIPE_U, PIPE_NOOP = range(4)
+PIPE_ARG_WIDTH = 6
 
 
 def _default_interpret(interpret: Optional[bool]) -> bool:
@@ -235,6 +242,116 @@ def _bh_kernel(desc_ref, xs_ref, ms_ref, acc_in, com_in, cm_in,
         return carry
 
     jax.lax.fori_loop(0, desc_ref.shape[0], body, 0)
+
+
+# ---------------------------------------------------------------------------
+# pipeline F/B/U family (the canonical uniform dense stage, see
+# repro.pipeline.exec: stage = tanh(x @ w + b), loss = mean squared error)
+# ---------------------------------------------------------------------------
+
+def _pipe_kernel(desc_ref, w_ref, b_ref, x_ref, y_ref,
+                 acts_in, cots_in, gw_in, gb_in, loss_in,
+                 acts_ref, cots_ref, gw_ref, gb_ref, loss_ref, *, inv_m):
+    acts_ref[...] = acts_in[...]
+    cots_ref[...] = cots_in[...]
+    gw_ref[...] = gw_in[...]
+    gb_ref[...] = gb_in[...]
+    loss_ref[...] = loss_in[...]
+    bt, dim = acts_ref.shape[1], acts_ref.shape[2]
+    inv_numel = 1.0 / (bt * dim)      # MSE mean over one microbatch output
+
+    def blk(ref, i):                  # (Bt, D) slab of a stacked buffer
+        return pl.load(ref, (pl.ds(i, 1), slice(None), slice(None)))[0]
+
+    def put(ref, i, v):
+        pl.store(ref, (pl.ds(i, 1), slice(None), slice(None)), v[None])
+
+    def row(ref, i):                  # (D,) row of a (S, D) buffer
+        return pl.load(ref, (pl.ds(i, 1), slice(None)))[0]
+
+    def body(q, carry):
+        s = desc_ref[q, 1]
+        m = desc_ref[q, 2]
+        a_in = desc_ref[q, 3]         # == a_out (safe dummy) when first
+        a_out = desc_ref[q, 4]
+        first = desc_ref[q, 5]
+        last = desc_ref[q, 6]
+
+        def stage_input():            # x[m] on stage 0, else prev output
+            return jnp.where(first > 0, blk(x_ref, m), blk(acts_ref, a_in))
+
+        def fwd():        # acts[s,m] = tanh(in @ w_s + b_s); last: loss+seed
+            h = jnp.tanh(stage_input() @ blk(w_ref, s) + row(b_ref, s)[None])
+            put(acts_ref, a_out, h)
+            diff = h - blk(y_ref, m)
+            lcur = pl.load(loss_ref, (pl.ds(m, 1), slice(None)))
+            pl.store(loss_ref, (pl.ds(m, 1), slice(None)),
+                     jnp.where(last > 0, jnp.sum(diff * diff) * inv_numel,
+                               lcur[0, 0]).reshape(1, 1))
+            put(cots_ref, a_out,
+                jnp.where(last > 0, (2.0 * inv_numel) * diff,
+                          blk(cots_ref, a_out)))
+            return 0
+
+        def bwd():        # grads[s] += vjp; cotangent flows to stage s-1
+            h = blk(acts_ref, a_out)
+            gpre = blk(cots_ref, a_out) * (1.0 - h * h)   # tanh' = 1 - y²
+            put(gw_ref, s, blk(gw_ref, s) + stage_input().T @ gpre)
+            pl.store(gb_ref, (pl.ds(s, 1), slice(None)),
+                     (row(gb_ref, s) + jnp.sum(gpre, axis=0))[None])
+            put(cots_ref, a_in,
+                jnp.where(first > 0, blk(cots_ref, a_in),
+                          gpre @ blk(w_ref, s).T))
+            return 0
+
+        def upd():        # microbatch averaging; optimizer is the caller's
+            put(gw_ref, s, blk(gw_ref, s) * inv_m)
+            pl.store(gb_ref, (pl.ds(s, 1), slice(None)),
+                     (row(gb_ref, s) * inv_m)[None])
+            return 0
+
+        def noop():
+            return 0
+
+        jax.lax.switch(desc_ref[q, 0], (fwd, bwd, upd, noop))
+        return carry
+
+    jax.lax.fori_loop(0, desc_ref.shape[0], body, 0)
+
+
+@functools.lru_cache(maxsize=None)
+def pipe_round_fn(inv_m: float, interpret: Optional[bool] = None):
+    """Round executor for the pipeline family:
+    ``(desc_slab, (w, b, x, y), (acts, cots, gw, gb, loss)) -> buffers``.
+    ``w``/``b`` are (S, D, D)/(S, D) stage-parameter stacks, ``x``/``y``
+    (M, Bt, D) microbatch inputs/targets (read-only); the kernel-resident
+    state is the stacked stage-activation (``acts``) and cotangent
+    (``cots``) slabs — flat (S·M, Bt, D), slot = stage·M + micro — plus the
+    grad-accumulation buffers ``gw``/``gb`` and per-micro ``loss`` (M, 1).
+    ``inv_m`` = 1/M is the U branch's microbatch averaging.  Cached per
+    (inv_m, interpret) so the runner's jit cache is shared."""
+    interp = _default_interpret(interpret)
+    kern = functools.partial(_pipe_kernel, inv_m=float(inv_m))
+
+    def round_fn(desc, statics, buffers):
+        w, b, x, y = statics
+        acts, cots, gw, gb, loss = buffers
+        shapes = (acts, cots, gw, gb, loss)
+        return pl.pallas_call(
+            kern,
+            grid=(),
+            in_specs=[_full_spec(desc.shape), _full_spec(w.shape),
+                      _full_spec(b.shape), _full_spec(x.shape),
+                      _full_spec(y.shape)]
+            + [_full_spec(a.shape) for a in shapes],
+            out_specs=tuple(_full_spec(a.shape) for a in shapes),
+            out_shape=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                            for a in shapes),
+            input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4},
+            interpret=interp,
+        )(desc, w, b, x, y, acts, cots, gw, gb, loss)
+
+    return round_fn
 
 
 @functools.lru_cache(maxsize=None)

@@ -20,7 +20,8 @@ implement it (donation on CPU is a no-op that warns).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional, Sequence, Tuple
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,3 +65,34 @@ def execute_plan(tables: TaskTable, round_fn: RoundFn,
         donate = jax.default_backend() in ("tpu", "gpu")
     run = _run_donating if donate else _run_plain
     return run(round_fn, desc, tuple(statics), tuple(buffers))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_one_round(round_fn, desc_r, statics, buffers):
+    return round_fn(desc_r, statics, buffers)
+
+
+def measure_round_times(tables: TaskTable, round_fn: RoundFn,
+                        statics: Sequence, buffers: Sequence,
+                        ) -> Tuple[List[float], Tuple]:
+    """Execute a task table one round slab at a time, timing each launch
+    (blocked on completion) — the measured per-round engine times that
+    ``core.simulator.replay_round_times`` feeds back into the discrete-
+    event model to validate its makespan prediction against the fused
+    single-dispatch execute time (ROADMAP: simulator validation).  The
+    first round is pre-run once as compile warmup (all slabs share one
+    shape, so one compilation covers every round).  Returns
+    ``(seconds_per_round, final_buffers)``."""
+    statics = tuple(statics)
+    bufs = tuple(buffers)
+    desc = jnp.asarray(tables.desc)
+    times: List[float] = []
+    if tables.nr_rounds:
+        jax.block_until_ready(
+            _run_one_round(round_fn, desc[0], statics, bufs))  # warmup only
+    for r in range(tables.nr_rounds):
+        t0 = time.perf_counter()
+        bufs = _run_one_round(round_fn, desc[r], statics, bufs)
+        jax.block_until_ready(bufs)
+        times.append(time.perf_counter() - t0)
+    return times, bufs

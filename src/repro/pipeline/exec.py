@@ -12,21 +12,48 @@ Two drivers share the same task bodies (``_PipeRunner``):
 * ``pipelined_value_and_grad``       — replays a discrete-event
   ``PipelineSchedule`` in global time order;
 * ``pipelined_value_and_grad_plan``  — executes the shared ExecutionPlan
-  lowering (``lower_pipeline_plan``) through a BatchSpec registry, one
-  conflict-free round per bulk-synchronous pipeline step.  Repeated calls
-  with the same (S, M, costs) hit the plan cache and skip re-lowering.
+  lowering (``lower_pipeline_plan``) on any registered execution backend
+  (``core.backends``).  ``rounds`` runs one conflict-free round per
+  bulk-synchronous pipeline step on the host; ``sequential``/``threaded``
+  drain the scheduler directly; ``engine`` lowers the F/B/U tasks to
+  descriptor tables and runs the whole value-and-grad step as ONE jitted
+  dispatch of the pipeline megakernel (DESIGN.md §Engine) — kernel-resident
+  state is the stacked stage-activation and grad-accumulation slabs.
+  Repeated calls with the same (S, M, costs) hit the plan cache and skip
+  re-lowering.
+
+The ``engine`` backend implements the *canonical uniform dense family*:
+every stage is :func:`dense_stage` (``tanh(x @ w + b)``, square ``(D, D)``
+weights), the loss is :func:`mse_loss`, and every microbatch is a
+``(Bt, D)`` slab.  ``supports()`` discovers the capability from the
+arguments — anything else raises :class:`~repro.core.BackendUnsupported`
+instead of silently computing the wrong family.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import BatchSpec
+from repro import engine
+from repro.core import (BackendUnsupported, BatchSpec, EngineHooks,
+                        get_backend, run_plan)
 
 from .qsched_pipeline import B, F, U, PipelineSchedule, lower_pipeline_plan
+
+
+def dense_stage(p, x):
+    """The canonical uniform dense pipeline stage: ``tanh(x @ w + b)``.
+    This is the stage family the engine megakernel implements in-kernel;
+    passing it (by identity) is what makes a pipeline engine-eligible."""
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+
+def mse_loss(y, mb):
+    """Canonical microbatch loss: ``mean((y - mb['y'])**2)``."""
+    return jnp.mean((y - mb["y"]) ** 2)
 
 
 class _PipeRunner:
@@ -71,6 +98,42 @@ class _PipeRunner:
         grads = [jax.tree.map(lambda g: g / self.M, gk) for gk in self.grads]
         return loss, grads
 
+    def registry(self) -> Mapping[int, BatchSpec]:
+        """BatchSpecs for the F/B/U family: host bodies (``run_one``) plus
+        the device descriptor encoders (``encode``) the engine backend
+        lowers through.  Rows: [etype, stage, micro, in_slot, out_slot,
+        first, last] — slots are flat stage·M + micro indices into the
+        stacked activation/cotangent slabs; ``in_slot`` points at the
+        previous stage's slab and degrades to the row's own (safe) slot on
+        stage 0, where the kernel predicates it away."""
+        S, M = self.S, self.M
+
+        def enc_f(tid, d):
+            _, k, m = d
+            return [(engine.PIPE_F, k, m,
+                     (k - 1) * M + m if k > 0 else k * M + m, k * M + m,
+                     1 if k == 0 else 0, 1 if k == S - 1 else 0)]
+
+        def enc_b(tid, d):
+            _, k, m = d
+            return [(engine.PIPE_B, k, m,
+                     (k - 1) * M + m if k > 0 else k * M + m, k * M + m,
+                     1 if k == 0 else 0, 0)]
+
+        def enc_u(tid, d):
+            return [(engine.PIPE_U, d[1], 0, 0, 0, 0, 0)]
+
+        return {
+            F: BatchSpec(run_one=lambda tid, d: self.forward(d[1], d[2]),
+                         encode=enc_f),
+            B: BatchSpec(run_one=lambda tid, d: self.backward(d[1], d[2]),
+                         encode=enc_b),
+            # U applies the optimizer — the CALLER's contract (see
+            # pipelined_value_and_grad); on the host it is a no-op, in the
+            # engine its branch performs the 1/M microbatch averaging.
+            U: BatchSpec(run_one=lambda tid, d: None, encode=enc_u),
+        }
+
 
 def pipelined_value_and_grad(
         stage_fns: Sequence[Callable],
@@ -81,7 +144,14 @@ def pipelined_value_and_grad(
 ) -> Tuple[jnp.ndarray, List[Any]]:
     """stage_fns[k](params_k, x) -> y;  loss_fn(y_last, micro_batch) -> loss
     (mean-reduced over the microbatch).  Returns (total loss, grads per
-    stage averaged over microbatches)."""
+    stage averaged over microbatches).
+
+    Event-kind contract: ``"F"`` and ``"B"`` execute the forward/backward
+    bodies; ``"U"`` (weight update) is a deliberate no-op here — this
+    function computes value-and-grad only, and *applying* the returned
+    gradients (optimizer step) is the caller's responsibility.  Any other
+    event kind is a schedule-synthesis bug and raises ``ValueError``
+    instead of being silently skipped."""
     S, M = schedule.n_stages, schedule.n_micro
     assert len(stage_fns) == S and len(microbatches) == M
     runner = _PipeRunner(stage_fns, loss_fn, stage_params, microbatches)
@@ -97,8 +167,75 @@ def pipelined_value_and_grad(
             runner.forward(k, m)
         elif kind == "B":
             runner.backward(k, m)
-        # "U" tasks would apply the optimizer; the caller does that.
+        elif kind != "U":
+            raise ValueError(
+                f"unknown pipeline event kind {kind!r} (expected F/B/U)")
     return runner.finish()
+
+
+def _engine_family(stage_fns, loss_fn, stage_params, microbatches):
+    """Return (S, M, Bt, D) when the canonical dense family applies —
+    every stage IS ``dense_stage``, the loss IS ``mse_loss``, and all
+    parameter/microbatch shapes are uniform — else None.  This is the
+    capability probe behind ``engine``-backend ``supports()``."""
+    if not stage_fns or not microbatches:
+        return None
+    if len(stage_params) != len(stage_fns):
+        return None
+    if any(f is not dense_stage for f in stage_fns) or loss_fn is not mse_loss:
+        return None
+    try:
+        pshapes = [(tuple(p["w"].shape), tuple(p["b"].shape))
+                   for p in stage_params]
+        mshapes = [(tuple(mb["x"].shape), tuple(mb["y"].shape))
+                   for mb in microbatches]
+    except (TypeError, KeyError, AttributeError):
+        return None
+    dim = pshapes[0][0][-1]
+    if any(w != (dim, dim) or b != (dim,) for w, b in pshapes):
+        return None
+    bt = mshapes[0][0][0]
+    if any(x != (bt, dim) or y != (bt, dim) for x, y in mshapes):
+        return None
+    return len(stage_fns), len(microbatches), bt, dim
+
+
+def _engine_hooks(stage_params, microbatches, fam, out_box) -> EngineHooks:
+    """EngineHooks for the canonical dense pipeline family: stack the
+    stage parameters and microbatches as device statics, allocate the
+    kernel-resident activation/cotangent/grad/loss slabs, and on
+    writeback deliver ``(loss, grads)`` — the U branch already applied
+    the 1/M averaging in-kernel, so writeback only sums the per-micro
+    losses."""
+    S, M, bt, dim = fam
+
+    def statics():
+        w = jnp.stack([jnp.asarray(p["w"], jnp.float32)
+                       for p in stage_params])
+        b = jnp.stack([jnp.asarray(p["b"], jnp.float32)
+                       for p in stage_params])
+        x = jnp.stack([jnp.asarray(mb["x"], jnp.float32)
+                       for mb in microbatches])
+        y = jnp.stack([jnp.asarray(mb["y"], jnp.float32)
+                       for mb in microbatches])
+        return w, b, x, y
+
+    def buffers():
+        return (jnp.zeros((S * M, bt, dim), jnp.float32),
+                jnp.zeros((S * M, bt, dim), jnp.float32),
+                jnp.zeros((S, dim, dim), jnp.float32),
+                jnp.zeros((S, dim), jnp.float32),
+                jnp.zeros((M, 1), jnp.float32))
+
+    def writeback(out):
+        _acts, _cots, gw, gb, loss = out
+        out_box["loss"] = jnp.sum(loss) / M
+        out_box["grads"] = [{"w": gw[k], "b": gb[k]} for k in range(S)]
+
+    return EngineHooks(
+        arg_width=engine.PIPE_ARG_WIDTH, pad_type=engine.PIPE_NOOP,
+        round_fn=engine.pipe_round_fn(1.0 / M), statics=statics,
+        buffers=buffers, writeback=writeback)
 
 
 def pipelined_value_and_grad_plan(
@@ -110,17 +247,30 @@ def pipelined_value_and_grad_plan(
         bwd_cost: float = 2.0,
         upd_cost: float = 0.5,
         per_stage_window: bool = True,
+        mode: str = "rounds",
 ) -> Tuple[jnp.ndarray, List[Any]]:
-    """Same computation, driven by the shared ExecutionPlan lowering: each
-    plan round is one bulk-synchronous pipeline step."""
+    """Same computation, driven by the shared ExecutionPlan lowering on
+    any registered execution backend (``mode``).  ``rounds``: each plan
+    round is one bulk-synchronous pipeline step.  ``engine``: the whole
+    value-and-grad step is ONE jitted dispatch of the pipeline megakernel
+    (canonical dense family only — see module docstring); gradients and
+    the microbatch-averaged loss come back from the device grad slabs."""
     runner = _PipeRunner(stage_fns, loss_fn, stage_params, microbatches)
     sched, _meta, plan = lower_pipeline_plan(
         runner.S, runner.M, fwd_cost, bwd_cost, upd_cost,
         per_stage_window=per_stage_window)
-    registry = {
-        F: BatchSpec(run_one=lambda tid, d: runner.forward(d[1], d[2])),
-        B: BatchSpec(run_one=lambda tid, d: runner.backward(d[1], d[2])),
-        U: BatchSpec(run_one=lambda tid, d: None),  # caller applies optimizer
-    }
-    plan.execute(sched, registry)
+    registry = runner.registry()
+    if get_backend(mode).device_resident:
+        fam = _engine_family(stage_fns, loss_fn, stage_params, microbatches)
+        if fam is None:
+            raise BackendUnsupported(
+                "the engine backend implements the canonical dense pipeline "
+                "family only: dense_stage stages, mse_loss loss, uniform "
+                "(Bt, D) microbatches and (D, D) stage weights")
+        box: Dict[str, Any] = {}
+        run_plan(sched, registry, mode, nr_workers=runner.S,
+                 engine=_engine_hooks(stage_params, microbatches, fam, box),
+                 plan=plan)
+        return box["loss"], box["grads"]
+    run_plan(sched, registry, mode, nr_workers=runner.S, plan=plan)
     return runner.finish()

@@ -121,7 +121,10 @@ def lower_pipeline_plan(n_stages: int, n_micro: int, fwd_cost: float = 1.0,
     round is one bulk-synchronous pipeline step (per-stage conflicts cap a
     round at one task per stage; grad-buffer conflicts keep accumulation and
     the update exclusive).  The plan cache means a trainer loop rebuilding
-    the same (S, M, costs) graph every step skips re-lowering."""
+    the same (S, M, costs) graph every step skips re-lowering.  The returned
+    plan executes on any registered backend (``core.backends``) —
+    ``exec.pipelined_value_and_grad_plan`` drives it end to end, including
+    the single-dispatch ``engine`` megakernel path."""
     sched, meta = build_pipeline_graph(n_stages, n_micro, fwd_cost, bwd_cost,
                                        upd_cost, max_in_flight,
                                        per_stage_window)

@@ -15,7 +15,6 @@ from repro.apps import qr
 from repro.core import (QSched, conflict_rounds, critical_path_weights,
                         lower, validate_rounds, BatchSpec, clear_plan_cache)
 import repro.core.plan as plan_mod
-from repro.pipeline.exec import pipelined_value_and_grad_plan
 
 
 def random_sched(rng, n_max=40, nres_max=10, hierarchical=False,
@@ -287,19 +286,8 @@ class TestVectorizedQRBuilder:
 
 
 class TestBHRoundsMode:
-    def test_rounds_matches_sequential(self):
-        """Acceptance gate: BH `rounds` mode agrees with `sequential` within
-        1e-4 relative error."""
-        rng = np.random.default_rng(3)
-        x, m = rng.random((1200, 3)), rng.random(1200) + 0.5
-        a1, _, _ = bh.solve(x, m, n_max=32, n_task=128, backend="ref",
-                            mode="sequential")
-        a2, _, _ = bh.solve(x, m, n_max=32, n_task=128, backend="ref",
-                            mode="rounds", nr_workers=4)
-        num = np.linalg.norm(np.asarray(a1) - np.asarray(a2), axis=0)
-        den = np.linalg.norm(np.asarray(a1), axis=0)
-        assert (num / np.maximum(den, 1e-12)).max() < 1e-4
-
+    # NOTE: cross-mode numerical equivalence moved to the backend matrix
+    # in tests/test_backends.py (TestMatrixBarnesHut).
     def test_bh_plan_rounds_validate(self):
         rng = np.random.default_rng(4)
         x, m = rng.random((800, 3)), rng.random(800) + 0.5
@@ -308,43 +296,9 @@ class TestBHRoundsMode:
         validate_rounds(g.sched, conflict_rounds(g.sched, 4))
 
 
-class TestPipelinePlanDriver:
-    def test_plan_grad_equals_monolithic(self):
-        import jax
-        import jax.numpy as jnp
-        S, M = 3, 6
-        key = jax.random.PRNGKey(2)
-        params = [{"w": jax.random.normal(jax.random.fold_in(key, k),
-                                          (8, 8)) * 0.3} for k in range(S)]
-
-        def stage_fn(p, x):
-            return jnp.tanh(x @ p["w"])
-
-        def loss_fn(y, mb):
-            return jnp.mean((y - mb["y"]) ** 2)
-
-        micro = [{"x": jax.random.normal(jax.random.fold_in(key, 10 + m),
-                                         (4, 8)),
-                  "y": jax.random.normal(jax.random.fold_in(key, 50 + m),
-                                         (4, 8))} for m in range(M)]
-        loss_p, grads_p = pipelined_value_and_grad_plan(
-            [stage_fn] * S, loss_fn, params, micro)
-
-        def monolithic(params_list):
-            total = 0.0
-            for mb in micro:
-                h = mb["x"]
-                for p in params_list:
-                    h = stage_fn(p, h)
-                total = total + loss_fn(h, mb)
-            return total / M
-
-        loss_m, grads_m = jax.value_and_grad(monolithic)(params)
-        assert float(jnp.abs(loss_p - loss_m)) < 1e-6
-        for gp, gm in zip(grads_p, grads_m):
-            for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gm)):
-                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                           rtol=1e-5, atol=1e-6)
+# NOTE: the pipeline plan-driver equivalence test moved to the backend
+# matrix in tests/test_backends.py (TestMatrixPipeline), which asserts it
+# across every registered backend including the engine.
 
 
 class TestConstructionValidation:

@@ -83,13 +83,6 @@ class TestNumerics:
         sign = np.sign(np.diag(r)) * np.sign(np.diag(r_ref))
         assert_allclose(r * sign[:, None], r_ref, atol=2e-3)
 
-    def test_modes_agree(self):
-        n, b = 64, 16
-        a = rand_matrix(n, seed=5)
-        r1, _ = qr.run_qr(a, tile=b, mode="sequential", backend="ref")
-        r2, _ = qr.run_qr(a, tile=b, mode="rounds", backend="ref", nr_queues=4)
-        assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-4)
-
     def test_threaded_qr_correct(self):
         """The pthread-pool analogue with real locks must produce a valid R
         (exercises conflict exclusion on the diagonal/row tiles)."""
