@@ -3,17 +3,24 @@ device-resident engine (DESIGN.md §Engine), for all three task families
 (QR, Barnes-Hut, pipeline F/B/U).  Writes ``BENCH_engine.json`` at the
 repo root.
 
-Two figures of merit per family:
+Three figures of merit per family:
 
 * **host dispatches per plan** — the per-round BatchSpec path issues one
   host call per batched group and one per ``run_one`` task
   (``count_host_dispatches``); the engine issues exactly one jitted call
   for the whole plan.  This is the paper's Fig-13 overhead argument moved
   to the dispatch layer: scheduler *and* dispatch off the critical path.
-* **execute wall time** (QR) — steady-state, graph/plan/lowering excluded
-  from both sides, first engine call excluded as compile: the per-round
-  path re-runs ``plan.execute`` against a fresh tile state; the engine
-  re-runs the single fused dispatch against fresh buffers.
+* **walk rows** — the ragged CSR table walks exactly ``items`` descriptor
+  rows; the padded slab layout it replaced walked ``rounds × max_width``
+  (``walk_reduction`` is the ratio, the pad work eliminated; CI asserts
+  ``pad_fraction == 0`` and per-family reduction floors).
+* **execute wall time** — steady-state, graph/plan/lowering excluded,
+  first calls excluded as compile.  For QR the per-round host path is
+  timed against the engine; for every family the engine itself is timed
+  both ways — per-round launches inside one jitted dispatch
+  (``engine_looped``) vs one whole-plan megakernel launch
+  (``engine_fused``) — the ROADMAP round-boundary-donation question
+  measured: CI keeps fused ≤ looped.
 """
 
 from __future__ import annotations
@@ -33,7 +40,8 @@ from repro.apps import barneshut as bh
 from repro.apps import qr
 from repro.core import lower
 from repro.pipeline import lower_pipeline_plan
-from repro.pipeline.exec import (_PipeRunner, dense_stage, mse_loss,
+from repro.pipeline.exec import (_PipeRunner, _engine_family, _engine_hooks,
+                                 dense_stage, mse_loss,
                                  pipelined_value_and_grad_plan)
 
 from .common import FULL, SMOKE, emit
@@ -49,6 +57,32 @@ def _best(setup, timed, repeat=REPEAT):
         out = timed(st)
         best = min(best, time.perf_counter() - t0)
     return best, out
+
+
+def _walk_stats(tables: "engine.TaskTable") -> dict:
+    stats = dict(tables.stats)
+    stats["walk_reduction"] = stats["padded_rows"] / max(stats["items"], 1)
+    return stats
+
+
+def _time_engine_walks(tables, round_fn, statics, make_buffers,
+                       repeat=max(REPEAT, 5)) -> dict:
+    """Steady-state engine execute times, per-round-looped vs whole-plan
+    fused, fresh buffers per repeat, first call per mode excluded as
+    compile.  Best-of-5 even at smoke sizes: CI floors compare the two
+    modes against each other, so jitter matters more than wall time."""
+    out = {}
+    for name, fuse in (("engine_looped", False), ("engine_fused", True)):
+        engine.execute_plan(tables, round_fn, statics, make_buffers(),
+                            fuse_rounds=fuse)                    # warmup
+
+        def run(bufs, fuse=fuse):
+            res = engine.execute_plan(tables, round_fn, statics, bufs,
+                                      fuse_rounds=fuse)
+            jax.block_until_ready(res)
+            return res
+        out[name], _ = _best(make_buffers, run, repeat=repeat)
+    return out
 
 
 def bench_qr():
@@ -78,33 +112,26 @@ def bench_qr():
     state = qr._TileState(dict(tiles), "pallas")
     tables = engine.lower_tables(
         plan, sched, state.batch_registry(),
-        arg_width=engine.QR_ARG_WIDTH, pad_type=engine.QR_NOOP)
+        arg_width=engine.QR_ARG_WIDTH, row_access=engine.qr_row_access)
     stack0 = jnp.stack([tiles[i, j] for j in range(nt) for i in range(mt)])
-
-    def setup_engine():
-        return (stack0 + 0.0, jnp.zeros_like(stack0))
-    fn = engine.qr_round_fn()
-    engine.execute_plan(tables, fn, (), setup_engine())   # compile warmup
-
-    def run_engine(bufs):
-        out = engine.execute_plan(tables, fn, (), bufs)
-        out[0].block_until_ready()
-        return out
-    t_engine, _ = _best(setup_engine, run_engine)
+    walks = _time_engine_walks(
+        tables, engine.qr_round_fn(), (),
+        lambda: (stack0 + 0.0, jnp.zeros_like(stack0)))
 
     tasks = sched.nr_tasks
+    t_engine = walks["engine_looped"]
     return {
         "graph": f"qr_{mt}x{nt}",
         "tasks": tasks,
         "rounds": plan.nr_rounds,
-        "table": dict(tables.stats),
+        "table": _walk_stats(tables),
         "host_dispatches": {
             "per_round": host_dispatches,
             "engine": engine.ENGINE_DISPATCHES_PER_PLAN,
         },
         "dispatch_reduction": host_dispatches
         / engine.ENGINE_DISPATCHES_PER_PLAN,
-        "execute_s": {"per_round": t_rounds, "engine": t_engine},
+        "execute_s": {"per_round": t_rounds, "engine": t_engine, **walks},
         "speedup": t_rounds / t_engine,
         "tasks_per_sec": {"per_round": tasks / t_rounds,
                           "engine": tasks / t_engine},
@@ -123,26 +150,23 @@ def bench_bh():
     host_dispatches = engine.count_host_dispatches(plan, g.sched, registry)
     tables = engine.lower_tables(plan, g.sched, registry,
                                  arg_width=engine.BH_ARG_WIDTH,
-                                 pad_type=engine.BH_NOOP)
-
-    def run_engine(state):
-        state.run(mode="engine", nr_workers=4)
-        return state
-    bh.BHState(g, backend="pallas").run(mode="engine")     # compile warmup
-    t_engine, _ = _best(lambda: bh.BHState(g, backend="pallas"), run_engine,
-                        repeat=3)
+                                 row_access=engine.bh_row_access)
+    hooks = st.engine_hooks()
+    statics = hooks.statics()
+    walks = _time_engine_walks(tables, hooks.round_fn, statics,
+                               hooks.buffers)
     return {
         "graph": f"bh_{n}",
         "tasks": g.sched.nr_tasks,
         "rounds": plan.nr_rounds,
-        "table": dict(tables.stats),
+        "table": _walk_stats(tables),
         "host_dispatches": {
             "per_round": host_dispatches,
             "engine": engine.ENGINE_DISPATCHES_PER_PLAN,
         },
         "dispatch_reduction": host_dispatches
         / engine.ENGINE_DISPATCHES_PER_PLAN,
-        "execute_s": {"engine": t_engine},
+        "execute_s": {"engine": walks["engine_looped"], **walks},
     }
 
 
@@ -162,8 +186,16 @@ def bench_pipeline():
                                      (bt, dim))} for m in range(M)]
     runner = _PipeRunner([dense_stage] * S, mse_loss, params, micro)
     sched, _, plan = lower_pipeline_plan(S, M, per_stage_window=True)
-    host_dispatches = engine.count_host_dispatches(plan, sched,
-                                                   runner.registry())
+    registry = runner.registry()
+    host_dispatches = engine.count_host_dispatches(plan, sched, registry)
+    tables = engine.lower_tables(plan, sched, registry,
+                                 arg_width=engine.PIPE_ARG_WIDTH,
+                                 row_access=engine.pipe_row_access)
+    fam = _engine_family([dense_stage] * S, mse_loss, params, micro)
+    hooks = _engine_hooks(params, micro, fam, {})
+    statics = hooks.statics()
+    walks = _time_engine_walks(tables, hooks.round_fn, statics,
+                               hooks.buffers)
 
     def run_mode(mode):
         def timed(_):
@@ -180,13 +212,14 @@ def bench_pipeline():
         "graph": f"pipeline_S{S}_M{M}",
         "tasks": sched.nr_tasks,
         "rounds": plan.nr_rounds,
+        "table": _walk_stats(tables),
         "host_dispatches": {
             "per_round": host_dispatches,
             "engine": engine.ENGINE_DISPATCHES_PER_PLAN,
         },
         "dispatch_reduction": host_dispatches
         / engine.ENGINE_DISPATCHES_PER_PLAN,
-        "execute_s": {"per_round": t_rounds, "engine": t_engine},
+        "execute_s": {"per_round": t_rounds, "engine": t_engine, **walks},
     }
 
 
@@ -211,6 +244,14 @@ def main() -> None:
          f"tasks={p['tasks']} rounds={p['rounds']} "
          f"dispatches={p['host_dispatches']['per_round']} "
          f"dispatch_reduction={p['dispatch_reduction']:.0f}x")
+    for fam in ("qr", "bh", "pipeline"):
+        f = out[fam]
+        emit(f"engine_{fam}_walk", f["table"]["items"],
+             f"pad_fraction={f['table']['pad_fraction']:.2f} "
+             f"walk_reduction={f['table']['walk_reduction']:.2f}x "
+             f"phases={f['table']['phases']} "
+             f"fused_us={f['execute_s']['engine_fused'] * 1e6:.0f} "
+             f"looped_us={f['execute_s']['engine_looped'] * 1e6:.0f}")
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
     path.write_text(json.dumps(out, indent=2) + "\n")
     emit("engine_json", 0, str(path))

@@ -522,9 +522,10 @@ class BHState:
                 self.cmass[cid] = float(cm_host[cid, 0])
 
         return EngineHooks(
-            arg_width=engine.BH_ARG_WIDTH, pad_type=engine.BH_NOOP,
+            arg_width=engine.BH_ARG_WIDTH,
             round_fn=engine.bh_round_fn(float(self.eps)), statics=statics,
-            buffers=buffers, writeback=writeback)
+            buffers=buffers, writeback=writeback,
+            row_access=engine.bh_row_access)
 
     # -- drivers ---------------------------------------------------------------
     def run(self, mode: str = "sequential", nr_workers: int = 1) -> None:

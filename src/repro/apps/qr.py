@@ -367,9 +367,10 @@ class _TileState:
                     self.tiles[i, j] = tiles[j * mt + i]
 
         return EngineHooks(
-            arg_width=engine.QR_ARG_WIDTH, pad_type=engine.QR_NOOP,
+            arg_width=engine.QR_ARG_WIDTH,
             round_fn=engine.qr_round_fn(), statics=tuple,
-            buffers=buffers, writeback=writeback)
+            buffers=buffers, writeback=writeback,
+            row_access=engine.qr_row_access)
 
 
 def run_qr(a: jnp.ndarray, tile: int = 32, mode: str = "sequential",

@@ -17,10 +17,10 @@ from .graph import (
 from .arrays import CompiledGraph
 from .locks import SeqLockManager, ThreadedLockManager, make_lock_manager
 from .plan import (BatchSpec, ExecutionPlan, PlanRound, TypedBatch,
-                   clear_plan_cache, lower, plan_cache_info)
+                   clear_plan_cache, color_phases, lower, plan_cache_info)
 from .queue import TaskQueue
-from .simulator import (SimResult, TimelineEvent, replay_round_times,
-                        scaling_curve, simulate)
+from .simulator import (SimResult, TimelineEvent, replay_item_times,
+                        replay_round_times, scaling_curve, simulate)
 from .static_sched import Round, conflict_rounds, list_schedule, validate_rounds
 from .weights import critical_path_length, critical_path_weights, toposort
 from .executors import SequentialExecutor, ThreadedExecutor, registry_fun
@@ -33,10 +33,10 @@ __all__ = [
     "FLAG_NONE", "FLAG_VIRTUAL", "TASK_NONE", "RES_NONE", "OWNER_NONE",
     "SeqLockManager", "ThreadedLockManager", "make_lock_manager",
     "SimResult", "TimelineEvent", "simulate", "scaling_curve",
-    "replay_round_times",
+    "replay_round_times", "replay_item_times",
     "Round", "conflict_rounds", "validate_rounds", "list_schedule",
     "BatchSpec", "ExecutionPlan", "PlanRound", "TypedBatch",
-    "lower", "clear_plan_cache", "plan_cache_info",
+    "lower", "clear_plan_cache", "color_phases", "plan_cache_info",
     "toposort", "critical_path_weights", "critical_path_length",
     "SequentialExecutor", "ThreadedExecutor", "registry_fun",
     "Backend", "BackendUnsupported", "EngineHooks",

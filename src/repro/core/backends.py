@@ -48,19 +48,25 @@ class BackendUnsupported(ValueError):
 class EngineHooks:
     """Family-level configuration the ``engine`` backend needs beyond the
     per-type ``BatchSpec.encode`` rows: which megakernel interprets the
-    descriptor slabs and which device buffers it owns.
+    descriptor rows, which state rows each row touches, and which device
+    buffers the kernel owns.
 
-    ``statics``/``buffers`` are zero-arg factories (called once per run) so
-    hooks stay cheap to build — device stacking happens only when the
-    engine actually executes.  ``writeback(buffers)`` scatters the final
-    device state back into the caller's host-side structures.
+    ``row_access(row) -> (reads, writes)`` maps one descriptor row to the
+    hashable state-row keys it loads from / stores to — the input to the
+    write-coloring pass that splits each round into grid-parallel-safe
+    sub-phases (``core.plan.color_phases``, DESIGN.md §Engine "Ragged
+    tables & grid walk").  ``statics``/``buffers`` are zero-arg factories
+    (called once per run) so hooks stay cheap to build — device stacking
+    happens only when the engine actually executes.
+    ``writeback(buffers)`` scatters the final device state back into the
+    caller's host-side structures.
     """
     arg_width: int
-    pad_type: int
-    round_fn: Callable            # (desc_slab, statics, buffers) -> buffers
+    round_fn: Callable   # (desc, phase_bounds, statics, buffers) -> buffers
     statics: Callable[[], Tuple]
     buffers: Callable[[], Tuple]
     writeback: Callable[[Tuple], None]
+    row_access: Optional[Callable] = None
     fuse_rounds: bool = False
     donate: Optional[bool] = None
 
@@ -170,7 +176,7 @@ class EngineBackend(Backend):
         from repro.engine import execute_plan, lower_tables
         tables = lower_tables(plan, sched, registry,
                               arg_width=engine.arg_width,
-                              pad_type=engine.pad_type)
+                              row_access=engine.row_access)
         out = execute_plan(tables, engine.round_fn, engine.statics(),
                            engine.buffers(), fuse_rounds=engine.fuse_rounds,
                            donate=engine.donate)

@@ -156,6 +156,51 @@ class ExecutionPlan:
                  engine=engine, plan=self)
 
 
+def color_phases(accesses: Sequence[Tuple[Sequence, Sequence]]) -> List[int]:
+    """Write-coloring pass: split one round's ordered work items into
+    *sub-phases* safe for a parallel walk (DESIGN.md §Engine, "Ragged
+    tables & grid walk").
+
+    ``accesses[i]`` is ``(reads, writes)`` — hashable state-row keys item
+    ``i`` loads from / stores to.  Conflict-free rounds guarantee that no
+    two *tasks* of a round touch overlapping locked resource subtrees, but
+    a single task may expand into several descriptor rows that
+    read-modify-write the same state row (Barnes-Hut ``acc[leaf] += …``
+    chunks, pipeline grad-buffer accumulation), and ``use``-shared state
+    may be read by one item while another rewrites it.  Those item pairs
+    must not execute concurrently.
+
+    The pass is an order-preserving barrier coloring: items are scanned in
+    slab order and a new phase opens exactly when an item conflicts with
+    the phase being filled (its writes intersect the phase's reads or
+    writes, or its reads intersect the phase's writes).  Phases are
+    therefore *contiguous* slices of the original order, items that share
+    a destination keep their relative order across phases (accumulation
+    order — and hence bit patterns — match the sequential walk), and
+    within a phase no two items touch a common state row, so the engine
+    may execute a phase's items in any order or in parallel
+    (property-tested in ``tests/test_engine_properties.py``).
+
+    Returns the phase boundaries as offsets into ``accesses``
+    (``[0, …, len(accesses)]``); ``len(result) - 1`` is the phase count
+    (0 for an empty round)."""
+    bounds: List[int] = [0]
+    if not accesses:
+        return bounds
+    cur_reads: set = set()
+    cur_writes: set = set()
+    for i, (reads, writes) in enumerate(accesses):
+        r, w = set(reads), set(writes)
+        conflict = bool((cur_writes & (r | w)) or (w & cur_reads))
+        if conflict and i > bounds[-1]:
+            bounds.append(i)
+            cur_reads, cur_writes = set(), set()
+        cur_reads |= r
+        cur_writes |= w
+    bounds.append(len(accesses))
+    return bounds
+
+
 def lower(sched: QSched, nr_lanes: int,
           max_tasks_per_round: Optional[int] = None,
           cache: bool = True) -> ExecutionPlan:

@@ -150,6 +150,40 @@ def replay_round_times(sched: QSched, plan, round_times,
         sched.prepare()
 
 
+def replay_item_times(sched: QSched, item_tids, item_times,
+                      nr_workers: int = 1, overhead: float = 0.0) -> SimResult:
+    """Replay *per-item* engine measurements (``engine.measure_round_times``
+    with ``per_item=True``) through the discrete-event model.
+
+    Where :func:`replay_round_times` can only distribute a round's wall
+    time over its tasks by static cost share (an additive, 1-worker model),
+    per-item measurements give each task its *own* measured cost — the sum
+    of its descriptor items' times (``item_tids`` maps items back to
+    tasks, ``TaskTable.tids``) — so the replay with ``nr_workers > 1``
+    predicts what lane parallelism would buy from real measurements: the
+    first step of validating the simulator beyond one worker (ROADMAP).
+    Tasks that lowered to no items (virtual tasks) replay at zero cost.
+    Costs are restored afterwards, as in :func:`replay_round_times`."""
+    item_tids = [int(t) for t in item_tids]
+    item_times = [float(t) for t in item_times]
+    if len(item_tids) != len(item_times):
+        raise ValueError(
+            f"{len(item_times)} item times for {len(item_tids)} items")
+    old_costs = list(sched._tcost)
+    costs = [0.0] * len(old_costs)
+    for tid, dt in zip(item_tids, item_times):
+        if not 0 <= tid < len(costs):
+            raise ValueError(f"item task id {tid} out of range")
+        costs[tid] += dt
+    try:
+        sched.set_costs(costs)
+        sched.prepare()
+        return simulate(sched, nr_workers, overhead=overhead)
+    finally:
+        sched.set_costs(old_costs)
+        sched.prepare()
+
+
 def scaling_curve(make_sched, worker_counts, overhead: float = 0.0):
     """Run ``simulate`` for each worker count; ``make_sched(n)`` must return
     a fresh prepared QSched with n queues.  Returns list of

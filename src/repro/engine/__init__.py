@@ -1,26 +1,31 @@
 """repro.engine: device-resident ExecutionPlan execution.
 
-Lower a prepared plan into dense task tables (``descriptors``), execute
-every round through one fused type-branching Pallas megakernel per task
-family (``megakernel``), and drive the whole plan as a single jitted
-``fori_loop`` with donated buffers (``runner``) — one host dispatch per
-plan instead of one per task/batch per round.  DESIGN.md §Engine.
+Lower a prepared plan into ragged CSR task tables with write-colored
+sub-phases (``descriptors``), execute them through one grid-parallel
+type-branching Pallas megakernel per task family (``megakernel``), and
+drive the whole plan as a single jitted dispatch with donated buffers
+(``runner``) — one host dispatch per plan instead of one per task/batch
+per round, and zero padded walk work.  DESIGN.md §Engine.
 """
 
 from .descriptors import TaskTable, count_host_dispatches, lower_tables
 from .megakernel import (BH_ARG_WIDTH, BH_COM_INNER, BH_COM_LEAF,
                          BH_MAX_CHILDREN, BH_NOOP, BH_PC, BH_PP, BH_SELF,
+                         DEFAULT_BLOCK_ITEMS,
                          PIPE_ARG_WIDTH, PIPE_B, PIPE_F, PIPE_NOOP, PIPE_U,
                          QR_ARG_WIDTH, QR_GEQRF, QR_LARFT, QR_NOOP,
-                         QR_SSRFT, QR_TSQRF, bh_round_fn, pipe_round_fn,
-                         qr_round_fn)
-from .runner import (ENGINE_DISPATCHES_PER_PLAN, execute_plan,
+                         QR_SSRFT, QR_TSQRF, bh_round_fn, bh_row_access,
+                         pipe_round_fn, pipe_row_access, qr_round_fn,
+                         qr_row_access)
+from .runner import (ENGINE_DISPATCHES_PER_PLAN, RoundTimings, execute_plan,
                      measure_round_times)
 
 __all__ = [
     "TaskTable", "lower_tables", "count_host_dispatches",
     "qr_round_fn", "bh_round_fn", "pipe_round_fn", "execute_plan",
-    "measure_round_times", "ENGINE_DISPATCHES_PER_PLAN",
+    "measure_round_times", "RoundTimings", "ENGINE_DISPATCHES_PER_PLAN",
+    "qr_row_access", "bh_row_access", "pipe_row_access",
+    "DEFAULT_BLOCK_ITEMS",
     "QR_GEQRF", "QR_LARFT", "QR_TSQRF", "QR_SSRFT", "QR_NOOP",
     "QR_ARG_WIDTH",
     "BH_COM_LEAF", "BH_COM_INNER", "BH_SELF", "BH_PP", "BH_PC", "BH_NOOP",

@@ -1,90 +1,134 @@
-"""Task-table lowering: an ExecutionPlan as dense device-resident arrays.
+"""Task-table lowering: an ExecutionPlan as ragged device-resident arrays.
 
 ``lower_tables`` turns a lowered :class:`~repro.core.plan.ExecutionPlan`
-into a :class:`TaskTable` — per-round, padded integer descriptor slabs plus
-round offsets/lengths — by asking the same ``BatchSpec`` registry that
+into a :class:`TaskTable` — a flat CSR descriptor array over rounds and
+write-colored sub-phases — by asking the same ``BatchSpec`` registry that
 drives the host round executor for each task's *device* encoding
 (``BatchSpec.encode``).  QR, Barnes-Hut and the pipeline F/B/U synthesizer
 all lower through this one path; what differs per family is only the
-encoder and the megakernel that interprets the rows
-(``repro.engine.megakernel``).  The ``engine`` entry of the execution
-backend registry (``core/backends.py``, DESIGN.md §Backends) drives this
-lowering for any family whose registry carries encoders plus
-``EngineHooks``.  Layout and invariants: DESIGN.md §Engine.
+encoder, the row-access map that drives the write coloring, and the
+megakernel that interprets the rows (``repro.engine.megakernel``).  The
+``engine`` entry of the execution backend registry (``core/backends.py``,
+DESIGN.md §Backends) drives this lowering for any family whose registry
+carries encoders plus ``EngineHooks``.  Layout and invariants: DESIGN.md
+§Engine ("Ragged tables & grid walk").
 
 A descriptor row is ``[engine_type, arg0, ..., arg{A-1}]`` (int32).  One
 *task* may encode to several rows (Barnes-Hut tasks expand into their
 direct-interaction work items); rows inherit the task's round, so every
-slab stays conflict-free — rows of one round belong to tasks whose locked
-resource subtrees are disjoint (property-tested in
+round's row slice stays conflict-free — rows of one round belong to tasks
+whose locked resource subtrees are disjoint (property-tested in
 ``tests/test_engine_properties.py``).  Row order within a round mirrors
 ``ExecutionPlan.execute``: typed batches in ascending type order, tasks in
-batch order — so the engine's in-round sequencing matches the host rounds
-mode exactly.  Virtual tasks encode to nothing.  Slabs are padded to the
-plan-wide maximum width with ``pad_type`` rows (the megakernel's no-op
-branch).
+batch order — so the engine's observable sequencing matches the host
+rounds mode.  Virtual tasks encode to nothing; empty rounds lower to a
+zero-length CSR slice, never a synthetic no-op row.
+
+The table is *ragged*: rounds index the flat row array through
+``round_offsets`` and each round is further split into contiguous
+sub-phases (``phase_offsets``, ``round_phase_ptr``) by the write-coloring
+pass (:func:`repro.core.plan.color_phases` over the family's
+``row_access`` map), such that no two items of one phase read or write a
+common state row.  Phases are what the megakernel's grid dimension walks —
+items of a phase may execute in any order or in parallel, phases run in
+order.  There are NO padding rows anywhere (``stats["pad_fraction"]`` is
+identically 0; CI asserts it).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Mapping, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.graph import FLAG_VIRTUAL, QSched
-from repro.core.plan import BatchSpec, ExecutionPlan
+from repro.core.plan import BatchSpec, ExecutionPlan, color_phases
+
+# row -> (reads, writes): hashable state-row keys a descriptor row loads
+# from / stores to, in a family-defined keyspace.  Drives the write
+# coloring; the per-family maps live next to the row layouts in
+# ``repro.engine.megakernel``.
+RowAccess = Callable[[Tuple[int, ...]], Tuple[Sequence, Sequence]]
 
 
 @dataclass(frozen=True)
 class TaskTable:
-    """Dense, device-ready descriptor tables for one lowered plan.
+    """Ragged, device-ready descriptor tables for one lowered plan.
 
-    ``desc[r, q]`` is row ``q`` of round ``r``: ``[etype, args...]``;
-    ``tids[r, q]`` is the owning task id (-1 for padding) — host-side
-    provenance for tests and stats, never shipped to the kernel.
-    ``lengths[r]`` counts real rows; ``offsets`` are the flat row offsets
-    of each round within the plan (``offsets[-1] == nr_items``).
+    ``desc[q]`` is flat row ``q``: ``[etype, args...]`` (unused trailing
+    arg columns are zero); ``tids[q]`` is the owning task id — host-side
+    provenance for tests, stats and per-item cost replay, never shipped to
+    the kernel.  ``round_offsets`` (CSR over rounds) and ``phase_offsets``
+    (CSR over write-colored sub-phases, plan-wide) both index ``desc``;
+    ``round_phase_ptr[r]:round_phase_ptr[r+1]`` are round ``r``'s phase
+    ids, so its phase boundaries are
+    ``phase_offsets[round_phase_ptr[r] : round_phase_ptr[r+1] + 1]``.
     """
-    desc: np.ndarray           # (R, W, 1 + arg_width) int32
-    tids: np.ndarray           # (R, W) int32, -1 padded
-    lengths: np.ndarray        # (R,) int32
-    offsets: np.ndarray        # (R + 1,) int64
+    desc: np.ndarray             # (nr_items, 1 + arg_width) int32
+    tids: np.ndarray             # (nr_items,) int32
+    round_offsets: np.ndarray    # (R + 1,) int64, CSR over rounds
+    phase_offsets: np.ndarray    # (P + 1,) int64, CSR over sub-phases
+    round_phase_ptr: np.ndarray  # (R + 1,) int64, round -> phase id range
     arg_width: int
-    pad_type: int
     nr_tasks: int
     structural_hash: str
     stats: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def nr_rounds(self) -> int:
-        return self.desc.shape[0]
+        return self.round_offsets.shape[0] - 1
 
     @property
-    def width(self) -> int:
-        return self.desc.shape[1]
+    def nr_phases(self) -> int:
+        return self.phase_offsets.shape[0] - 1
 
     @property
     def nr_items(self) -> int:
-        return int(self.offsets[-1])
+        return int(self.round_offsets[-1])
+
+    @property
+    def round_lengths(self) -> np.ndarray:
+        return np.diff(self.round_offsets)
+
+    def round_rows(self, r: int) -> np.ndarray:
+        o0, o1 = int(self.round_offsets[r]), int(self.round_offsets[r + 1])
+        return self.desc[o0:o1]
 
     def round_tids(self, r: int) -> List[int]:
-        row = self.tids[r]
-        return row[row >= 0].tolist()
+        o0, o1 = int(self.round_offsets[r]), int(self.round_offsets[r + 1])
+        return self.tids[o0:o1].tolist()
+
+    def round_phases(self, r: int) -> np.ndarray:
+        """Round ``r``'s phase boundaries as offsets into the flat row
+        array (``[round_offsets[r], ..., round_offsets[r+1]]``; length 1
+        for an empty round)."""
+        p0, p1 = int(self.round_phase_ptr[r]), int(self.round_phase_ptr[r + 1])
+        if p0 == p1:
+            return self.round_offsets[r:r + 1].copy()
+        return self.phase_offsets[p0:p1 + 1]
 
 
 def lower_tables(plan: ExecutionPlan, sched: QSched,
                  registry: Mapping[int, BatchSpec], *,
-                 arg_width: int, pad_type: int) -> TaskTable:
-    """Lower a plan's rounds into a :class:`TaskTable` via the registry's
-    ``encode`` hooks.  Raises ``KeyError`` when a non-virtual task type has
-    no spec or no encoder, mirroring ``ExecutionPlan.execute``."""
+                 arg_width: int,
+                 row_access: Optional[RowAccess] = None) -> TaskTable:
+    """Lower a plan's rounds into a ragged :class:`TaskTable` via the
+    registry's ``encode`` hooks, write-coloring each round's rows into
+    sub-phases with ``row_access`` (no ``row_access``: one phase per
+    non-empty round — only valid when the caller guarantees a round's rows
+    never touch a common state row, or the walk stays sequential).  Raises
+    ``KeyError`` when a non-virtual task type has no spec or no encoder,
+    mirroring ``ExecutionPlan.execute``."""
     plan.check_compatible(sched)
     flags = sched._tflags
     datas = sched._tdata
-    per_round_rows: List[List[Tuple[int, ...]]] = []
-    per_round_tids: List[List[int]] = []
-    for rnd in plan.rounds:
+    all_rows: List[Tuple[int, ...]] = []
+    all_tids: List[int] = []
+    round_offsets = np.zeros(plan.nr_rounds + 1, dtype=np.int64)
+    phase_offsets: List[int] = [0]
+    round_phase_ptr = np.zeros(plan.nr_rounds + 1, dtype=np.int64)
+    for r, rnd in enumerate(plan.rounds):
         rows: List[Tuple[int, ...]] = []
         rtids: List[int] = []
         for tb in rnd.batches:
@@ -108,34 +152,49 @@ def lower_tables(plan: ExecutionPlan, sched: QSched,
                             f" columns, table holds {1 + arg_width}")
                     rows.append(row)
                     rtids.append(tid)
-        per_round_rows.append(rows)
-        per_round_tids.append(rtids)
+        base = len(all_rows)
+        if rows:
+            if row_access is None:
+                bounds = [0, len(rows)]
+            else:
+                bounds = color_phases([row_access(row) for row in rows])
+            phase_offsets.extend(base + b for b in bounds[1:])
+        # empty rounds contribute zero phases and a zero-length CSR slice
+        all_rows.extend(rows)
+        all_tids.extend(rtids)
+        round_offsets[r + 1] = len(all_rows)
+        round_phase_ptr[r + 1] = len(phase_offsets) - 1
 
-    # an empty plan lowers to a genuinely 0-round table, so the
-    # nr_rounds == plan.nr_rounds invariant holds for every input
-    nr_rounds = len(per_round_rows)
-    width = max((len(r) for r in per_round_rows), default=0) or 1
-    desc = np.zeros((nr_rounds, width, 1 + arg_width), dtype=np.int32)
-    desc[:, :, 0] = pad_type
-    tids = np.full((nr_rounds, width), -1, dtype=np.int32)
-    lengths = np.zeros(nr_rounds, dtype=np.int32)
-    for r, (rows, rtids) in enumerate(zip(per_round_rows, per_round_tids)):
-        lengths[r] = len(rows)
-        for q, row in enumerate(rows):
-            desc[r, q, :len(row)] = row
-        if rtids:
-            tids[r, :len(rtids)] = rtids
-    offsets = np.zeros(nr_rounds + 1, dtype=np.int64)
-    np.cumsum(lengths, out=offsets[1:])
-    nr_items = int(offsets[-1])
-    pad_rows = nr_rounds * width - nr_items
+    nr_items = len(all_rows)
+    desc = np.zeros((nr_items, 1 + arg_width), dtype=np.int32)
+    for q, row in enumerate(all_rows):
+        desc[q, :len(row)] = row
+    tids = np.asarray(all_tids, dtype=np.int32)
+    phase_off = np.asarray(phase_offsets, dtype=np.int64)
+    lengths = np.diff(round_offsets)
+    width = int(lengths.max()) if lengths.size else 0
+    nr_phases = phase_off.shape[0] - 1
+    phase_lengths = np.diff(phase_off)
+    # measured, not asserted-by-construction: rows allocated in the flat
+    # array beyond what the round CSR references are pad/filler work (CI
+    # gates pad_fraction == 0, so a layout change that reintroduces
+    # filler rows fails the gate instead of silently inflating the walk)
+    pad_rows = desc.shape[0] - int(round_offsets[-1])
     return TaskTable(
-        desc=desc, tids=tids, lengths=lengths, offsets=offsets,
-        arg_width=arg_width, pad_type=pad_type, nr_tasks=plan.nr_tasks,
+        desc=desc, tids=tids, round_offsets=round_offsets,
+        phase_offsets=phase_off, round_phase_ptr=round_phase_ptr,
+        arg_width=arg_width, nr_tasks=plan.nr_tasks,
         structural_hash=plan.structural_hash,
-        stats={"rounds": nr_rounds, "width": width, "items": nr_items,
+        stats={"rounds": plan.nr_rounds, "phases": nr_phases,
+               "items": nr_items, "width": width,
+               "max_phase_len": int(phase_lengths.max())
+               if phase_lengths.size else 0,
+               # the dense layout this table replaces padded every round
+               # to the plan-wide max width; the ragged walk does zero
+               # pad work — benchmarks report the ratio as walk_reduction
+               "padded_rows": plan.nr_rounds * width,
                "pad_rows": pad_rows,
-               "pad_fraction": pad_rows / max(nr_rounds * width, 1)})
+               "pad_fraction": pad_rows / max(desc.shape[0], 1)})
 
 
 def count_host_dispatches(plan: ExecutionPlan, sched: QSched,

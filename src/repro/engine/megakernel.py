@@ -1,66 +1,95 @@
-"""Fused-round Pallas megakernels: one kernel launch per round per family.
+"""Grid-parallel Pallas megakernels: a ragged task-table walk per family.
 
 Each task *family* (tiled QR, Barnes-Hut, the pipeline F/B/U synthesizer)
-gets one Pallas kernel that takes
-a round's descriptor slab and the family's resident state buffers, walks
-the slab with an in-kernel ``fori_loop`` and branches on the engine type of
-each row with ``lax.switch`` (exllamav3-style type fusion) — replacing the
-N per-type ``pallas_call``s the host rounds mode issues per round with a
-single launch whose operands never leave the device.  Layout, the
-type-branch contract and the donation/aliasing rules are documented in
-DESIGN.md §Engine.
+gets one Pallas kernel that walks a ragged (CSR) descriptor table as a
+real **grid** over item blocks: each write-colored *sub-phase* is chunked
+into blocks of ≤ ``block_items`` contiguous work items, the grid iterates
+the blocks phase-major (exactly as ragged as the phases — zero inert
+programs, zero padding rows), and every grid program runs a short
+in-kernel ``fori_loop`` over its block, branching on each row's engine
+type with ``lax.switch`` (exllamav3-style type fusion).  Descriptor rows
+and block bounds are scalar-prefetched
+(``pltpu.PrefetchScalarGridSpec``), so each program reads its item range
+and drives its gathers from SMEM-resident integers.  The walk does
+exactly ``items`` rows of work — the padded slab layout this replaces did
+``rounds × max_width``.  Layout, the type-branch contract and the
+coloring/visibility rules are documented in DESIGN.md §Engine ("Ragged
+tables & grid walk").
 
 Contract highlights (see the design doc for the full statement):
 
 * State buffers are passed in and aliased to the outputs
-  (``input_output_aliases``); the kernel copies them into its output refs
-  once, then every branch loads *and* stores through the output refs, so
-  items observe all earlier items' writes — read-modify-write accumulation
-  (Barnes-Hut ``+=``) and the QR triangular in-place updates are exact.
-* Row order within a slab is the host rounds-mode order (ascending task
-  type, batch order within a type), so the engine's sequencing is
-  observationally identical to ``ExecutionPlan.execute``; conflict-freedom
-  of every slab is what makes the rounds independent of *which* items land
-  together (property-tested).
-* Padding rows carry the family's no-op type — the last ``lax.switch``
-  branch, so out-of-range types clamp to a no-op rather than garbage.
+  (``input_output_aliases``) with whole-array blocks whose index maps are
+  constant, so the state block is resident across all grid programs; the
+  first grid program copies the input refs into the output refs
+  (``_init_state`` — interpret mode seeds aliased outputs anyway, but
+  compiled backends leave output windows undefined until written), and
+  every branch then loads *and* stores through the output refs, so items
+  observe all earlier programs' writes.
+* Blocks never span a phase boundary, so phase-major block order
+  serializes exactly the item pairs that touch a common state row — the
+  write coloring (``core.plan.color_phases``) guarantees items of one
+  phase read/write disjoint rows, so a phase's programs are safe to
+  execute in any order or in parallel (on a multi-core TPU, a phase's
+  block range is the dimension a parallel ``dimension_semantics`` walk
+  may split).  Because the coloring preserves per-destination item order,
+  read-modify-write accumulation (Barnes-Hut ``+=``, pipeline grad slabs)
+  produces the same bit patterns as the sequential walk it replaced.
+* Each family keeps a no-op engine type as the **last** ``lax.switch``
+  branch, so a clamped out-of-range type degrades to a no-op rather than
+  garbage (a lowering-bug guard; tables themselves carry no no-op rows).
 * The numerical bodies are the exact value-level functions the per-op
   kernels use (``kernels.qr_tile.kernel.*_math``,
   ``kernels.nbody.kernel.acc_block``) — one source of truth for the math.
 
 On a CPU runtime the kernels run in Pallas interpret mode (same default as
-``kernels/*/ops.py``), so CI executes the identical engine code path.
+``kernels/*/ops.py``), so CI executes the identical engine code path; the
+grid then executes sequentially (phase-major), which the coloring
+invariant makes observationally identical to any parallel interleaving of
+a phase's blocks.
+
+The per-family ``*_row_access`` maps in this module declare which state
+rows each descriptor row reads and writes, in the same keyspace the
+kernels address — they are the input to the write coloring in
+``descriptors.lower_tables`` and are property-tested against the phase
+partition in ``tests/test_engine_properties.py``.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.nbody.kernel import acc_block
 from repro.kernels.qr_tile.kernel import (apply_qt_math, apply_tsqt_math,
                                           geqrf_math, tsqrf_math)
 
 # QR engine types — intentionally equal to apps.qr.T_* so task types encode
-# to themselves; QR_NOOP pads the slabs (descriptors.lower_tables pad_type).
+# to themselves; QR_NOOP is the defensive clamp branch (never in a table).
 QR_GEQRF, QR_LARFT, QR_TSQRF, QR_SSRFT, QR_NOOP = range(5)
 QR_ARG_WIDTH = 3       # rows: [etype, slot0, slot1, slot2] (tile indices)
 
-# Barnes-Hut engine (work-item) types; BH_NOOP pads.
+# Barnes-Hut engine (work-item) types; BH_NOOP is the clamp branch.
 (BH_COM_LEAF, BH_COM_INNER, BH_SELF, BH_PP, BH_PC, BH_NOOP) = range(6)
 BH_MAX_CHILDREN = 8    # octree fan-out; COM_INNER rows carry 8 child cells
 # and ragged PC source lists chunk into rows of 8 cells (pad = zero-mass)
 BH_ARG_WIDTH = 1 + BH_MAX_CHILDREN   # rows: [etype, write, a0..a7]
 
-# Pipeline F/B/U engine types; PIPE_NOOP pads.  Rows:
+# Pipeline F/B/U engine types; PIPE_NOOP is the clamp branch.  Rows:
 # [etype, stage, micro, in_slot, out_slot, first, last] where the slots are
 # flat (stage, micro) indices into the stacked activation/cotangent slabs.
 PIPE_F, PIPE_B, PIPE_U, PIPE_NOOP = range(4)
 PIPE_ARG_WIDTH = 6
+
+# Work items one grid program walks; each sub-phase chunks into
+# ceil(phase_len / block_items) ragged blocks (blocks never span a phase
+# boundary, so a phase's programs stay mutually conflict-free).
+DEFAULT_BLOCK_ITEMS = 8
 
 
 def _default_interpret(interpret: Optional[bool]) -> bool:
@@ -69,17 +98,143 @@ def _default_interpret(interpret: Optional[bool]) -> bool:
     return interpret
 
 
-def _full_spec(shape):
-    return pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+# ---------------------------------------------------------------------------
+# row-access maps (write-coloring inputs): row -> (reads, writes) state keys
+# ---------------------------------------------------------------------------
+
+def qr_row_access(row: Sequence[int]) -> Tuple[Tuple, Tuple]:
+    """QR keyspace: ``("t", slot)`` tile-stack rows, ``("m", slot)``
+    T-factor rows (column-major tile index)."""
+    et = row[0]
+    if et == QR_GEQRF:
+        s0 = row[1]
+        return (("t", s0),), (("t", s0), ("m", s0))
+    if et == QR_LARFT:
+        s0, s1 = row[1], row[2]
+        return (("t", s0), ("m", s0), ("t", s1)), (("t", s1),)
+    if et == QR_TSQRF:
+        s0, s1 = row[1], row[2]
+        return (("t", s0), ("t", s1)), (("t", s0), ("t", s1), ("m", s1))
+    if et == QR_SSRFT:
+        s0, s1, s2 = row[1], row[2], row[3]
+        return ((("t", s0), ("m", s0), ("t", s1), ("t", s2)),
+                (("t", s1), ("t", s2)))
+    return (), ()
+
+
+def bh_row_access(row: Sequence[int]) -> Tuple[Tuple, Tuple]:
+    """Barnes-Hut keyspace: ``("a", leaf_slot)`` acceleration blocks,
+    ``("c", cell)`` COM/mass rows.  Particle positions/masses are
+    read-only statics and carry no keys."""
+    et = row[0]
+    if et == BH_COM_LEAF:
+        return (), (("c", row[1]),)
+    if et == BH_COM_INNER:
+        return (tuple(("c", int(c)) for c in row[2:2 + BH_MAX_CHILDREN]),
+                (("c", row[1]),))
+    if et in (BH_SELF, BH_PP):
+        return (), (("a", row[1]),)
+    if et == BH_PC:
+        return (tuple(("c", int(c)) for c in row[2:2 + BH_MAX_CHILDREN]),
+                (("a", row[1]),))
+    return (), ()
+
+
+def pipe_row_access(row: Sequence[int]) -> Tuple[Tuple, Tuple]:
+    """Pipeline keyspace: ``("act"|"cot", slot)`` activation/cotangent
+    slabs, ``("gw"|"gb", stage)`` grad buffers, ``("loss", micro)`` loss
+    rows.  Stage parameters and microbatch inputs are statics."""
+    et, s, m, a_in, a_out = row[0], row[1], row[2], row[3], row[4]
+    if et == PIPE_F:
+        return ((("act", a_in), ("cot", a_out), ("loss", m)),
+                (("act", a_out), ("cot", a_out), ("loss", m)))
+    if et == PIPE_B:
+        return ((("act", a_in), ("act", a_out), ("cot", a_out),
+                 ("gw", s), ("gb", s), ("cot", a_in)),
+                (("gw", s), ("gb", s), ("cot", a_in)))
+    if et == PIPE_U:
+        return ((("gw", s), ("gb", s)), (("gw", s), ("gb", s)))
+    return (), ()
+
+
+# ---------------------------------------------------------------------------
+# grid-walk plumbing shared by the three families
+# ---------------------------------------------------------------------------
+
+def _blocks_of(phase_bounds: Tuple[int, ...], block_items: int) -> Tuple:
+    """Chunk each phase ``[phase_bounds[p], phase_bounds[p+1])`` into
+    blocks of ≤ ``block_items`` contiguous work items — one grid program
+    each, emitted phase-major so phase order is preserved by the grid walk
+    and no program ever spans a phase boundary.  The blocking is exactly
+    as ragged as the phases: zero inert programs."""
+    blocks = []
+    for b0, b1 in zip(phase_bounds, phase_bounds[1:]):
+        for s in range(int(b0), int(b1), block_items):
+            blocks.append((s, min(s + block_items, int(b1))))
+    return tuple(blocks)
+
+
+def _walk_block(bounds_ref, body) -> None:
+    """Run ``body(q, carry)`` over this grid program's work items
+    (``bounds_ref[t] = [start, end)`` for program ``t``)."""
+    t = pl.program_id(0)
+    jax.lax.fori_loop(bounds_ref[t, 0], bounds_ref[t, 1], body, 0)
+
+
+def _init_state(in_refs, out_refs) -> None:
+    """Copy the aliased state into the output refs on the first grid
+    program.  Interpret mode already seeds aliased outputs with the input
+    values, but compiled backends leave output windows undefined until
+    written — the guarded copy makes the visibility contract explicit
+    everywhere (program 0 runs first; the constant-index state block then
+    stays resident for the rest of the grid)."""
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        for i_ref, o_ref in zip(in_refs, out_refs):
+            o_ref[...] = i_ref[...]
+
+
+def _grid_walk(kernel, desc, block_bounds, statics, buffers,
+               interpret: bool):
+    """One ``pallas_call`` walking ``desc`` over a flat grid of ragged
+    item blocks: ``block_bounds``/``desc`` scalar-prefetched (SMEM
+    integers drive the loop bounds and gathers), statics read-only, state
+    buffers aliased input→output with constant whole-array blocks
+    (resident across programs, so later programs observe earlier writes).
+    Blocks are phase-major: programs of one phase touch pairwise-disjoint
+    state rows (the write-coloring invariant) and may execute in any
+    order or concurrently; phase order itself is what serializes the
+    conflicting pairs."""
+    statics = tuple(statics)
+    buffers = tuple(buffers)
+
+    def full(a):
+        return pl.BlockSpec(a.shape,
+                            lambda t, *_, nd=a.ndim: (0,) * nd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(block_bounds.shape[0],),
+        in_specs=[full(a) for a in statics + buffers],
+        out_specs=tuple(full(a) for a in buffers),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                        for a in buffers),
+        input_output_aliases={2 + len(statics) + i: i
+                              for i in range(len(buffers))},
+        interpret=interpret,
+    )(block_bounds, desc, *statics, *buffers)
 
 
 # ---------------------------------------------------------------------------
 # tiled QR family
 # ---------------------------------------------------------------------------
 
-def _qr_kernel(desc_ref, tiles_in, tmat_in, tiles_ref, tmat_ref):
-    tiles_ref[...] = tiles_in[...]
-    tmat_ref[...] = tmat_in[...]
+def _qr_kernel(bounds_ref, desc_ref, tiles_in, tmat_in, tiles_ref, tmat_ref):
+    _init_state((tiles_in, tmat_in), (tiles_ref, tmat_ref))
 
     def tile(ref, i):
         return pl.load(ref, (pl.ds(i, 1), slice(None), slice(None)))[0]
@@ -127,32 +282,26 @@ def _qr_kernel(desc_ref, tiles_in, tmat_in, tiles_ref, tmat_ref):
         jax.lax.switch(desc_ref[q, 0], (geqrf, larft, tsqrf, ssrft, noop))
         return carry
 
-    jax.lax.fori_loop(0, desc_ref.shape[0], body, 0)
+    _walk_block(bounds_ref, body)
 
 
 @functools.lru_cache(maxsize=None)
-def qr_round_fn(interpret: Optional[bool] = None):
-    """Round executor for the QR family: ``(desc_slab, (), (tiles, tmat))
-    -> (tiles, tmat)``.  ``tiles``/``tmat`` are (ntiles, b, b) stacks in
-    column-major tile-index order; ``tmat[kk]`` holds the DGEQRF T factor
-    and ``tmat[ik]`` the DTSQRF one (disjoint indices, one buffer).  Cached
-    per ``interpret`` flag so the runner's jit cache is shared."""
+def qr_round_fn(interpret: Optional[bool] = None,
+                block_items: int = DEFAULT_BLOCK_ITEMS):
+    """Walk executor for the QR family:
+    ``(desc, phase_bounds, (), (tiles, tmat)) -> (tiles, tmat)``.
+    ``phase_bounds`` are the static sub-phase boundaries of the rows in
+    ``desc``; ``tiles``/``tmat`` are (ntiles, b, b) stacks in column-major
+    tile-index order; ``tmat[kk]`` holds the DGEQRF T factor and
+    ``tmat[ik]`` the DTSQRF one (disjoint indices, one buffer).  Cached
+    per (interpret, block_items) so the runner's jit cache is shared."""
     interp = _default_interpret(interpret)
 
-    def round_fn(desc, statics, buffers):
+    def round_fn(desc, phase_bounds, statics, buffers):
         del statics
-        tiles, tmat = buffers
-        return pl.pallas_call(
-            _qr_kernel,
-            grid=(),
-            in_specs=[_full_spec(desc.shape), _full_spec(tiles.shape),
-                      _full_spec(tmat.shape)],
-            out_specs=(_full_spec(tiles.shape), _full_spec(tmat.shape)),
-            out_shape=(jax.ShapeDtypeStruct(tiles.shape, tiles.dtype),
-                       jax.ShapeDtypeStruct(tmat.shape, tmat.dtype)),
-            input_output_aliases={1: 0, 2: 1},
-            interpret=interp,
-        )(desc, tiles, tmat)
+        bounds = jnp.asarray(_blocks_of(phase_bounds, block_items),
+                             jnp.int32)
+        return _grid_walk(_qr_kernel, desc, bounds, (), buffers, interp)
 
     return round_fn
 
@@ -161,15 +310,10 @@ def qr_round_fn(interpret: Optional[bool] = None):
 # Barnes-Hut family
 # ---------------------------------------------------------------------------
 
-def _bh_kernel(desc_ref, xs_ref, ms_ref, acc_in, com_in, cm_in,
+def _bh_kernel(bounds_ref, desc_ref, xs_ref, ms_ref, acc_in, com_in, cm_in,
                acc_ref, com_ref, cm_ref, *, eps):
-    acc_ref[...] = acc_in[...]
-    com_ref[...] = com_in[...]
-    cm_ref[...] = cm_in[...]
-    dtype = acc_ref.dtype
+    _init_state((acc_in, com_in, cm_in), (acc_ref, com_ref, cm_ref))
     npart = xs_ref.shape[2]
-    ncell = com_ref.shape[0]        # ncells + 1 (last row = zero-mass pad)
-    cell_iota = jax.lax.broadcasted_iota(jnp.int32, (1, ncell), 1)
     gi = jax.lax.broadcasted_iota(jnp.int32, (npart, 1), 0)
     gj = jax.lax.broadcasted_iota(jnp.int32, (1, npart), 1)
 
@@ -180,8 +324,17 @@ def _bh_kernel(desc_ref, xs_ref, ms_ref, acc_in, com_in, cm_in,
         return pl.load(ms_ref, (pl.ds(i, 1), slice(None)))[0]
 
     def gather_cells(idx):          # (K,) cell ids → (K,3) coms, (K,) masses
-        onehot = (idx[:, None] == cell_iota).astype(dtype)
-        return onehot @ com_ref[...], (onehot @ cm_ref[...])[:, 0]
+        # per-slot dynamic-slice gathers, NOT a one-hot matmul over the
+        # whole com array: the kernel must read exactly the ≤8 rows that
+        # bh_row_access declares, or the write coloring could co-phase
+        # this item with a writer of an undeclared cell row
+        xs_sel = jnp.stack(
+            [pl.load(com_ref, (pl.ds(idx[k], 1), slice(None)))[0]
+             for k in range(BH_MAX_CHILDREN)])
+        m_sel = jnp.stack(
+            [pl.load(cm_ref, (pl.ds(idx[k], 1), slice(None)))[0, 0]
+             for k in range(BH_MAX_CHILDREN)])
+        return xs_sel, m_sel
 
     def add_acc(i, delta):          # acc[i] += delta, read-modify-write
         cur = pl.load(acc_ref, (pl.ds(i, 1), slice(None), slice(None)))
@@ -241,7 +394,29 @@ def _bh_kernel(desc_ref, xs_ref, ms_ref, acc_in, com_in, cm_in,
                        (com_leaf, com_inner, self_, pp, pc, noop))
         return carry
 
-    jax.lax.fori_loop(0, desc_ref.shape[0], body, 0)
+    _walk_block(bounds_ref, body)
+
+
+@functools.lru_cache(maxsize=None)
+def bh_round_fn(eps: float, interpret: Optional[bool] = None,
+                block_items: int = DEFAULT_BLOCK_ITEMS):
+    """Walk executor for the Barnes-Hut family:
+    ``(desc, phase_bounds, (xs, ms), (acc, com, cmass)) ->
+    (acc, com, cmass)``.  ``xs``/``ms`` are (L, 3, P)/(L, P)
+    zero-mass-padded leaf blocks (read-only); ``com``/``cmass`` carry one
+    extra zero row as the gather pad target — ragged COM-source lists
+    arrive pre-chunked into ≤8-source PC rows, so there is no side table.
+    Cached per (eps, interpret, block_items) so the runner's jit cache is
+    shared."""
+    interp = _default_interpret(interpret)
+    kern = functools.partial(_bh_kernel, eps=float(eps))
+
+    def round_fn(desc, phase_bounds, statics, buffers):
+        bounds = jnp.asarray(_blocks_of(phase_bounds, block_items),
+                             jnp.int32)
+        return _grid_walk(kern, desc, bounds, statics, buffers, interp)
+
+    return round_fn
 
 
 # ---------------------------------------------------------------------------
@@ -249,14 +424,11 @@ def _bh_kernel(desc_ref, xs_ref, ms_ref, acc_in, com_in, cm_in,
 # repro.pipeline.exec: stage = tanh(x @ w + b), loss = mean squared error)
 # ---------------------------------------------------------------------------
 
-def _pipe_kernel(desc_ref, w_ref, b_ref, x_ref, y_ref,
+def _pipe_kernel(bounds_ref, desc_ref, w_ref, b_ref, x_ref, y_ref,
                  acts_in, cots_in, gw_in, gb_in, loss_in,
                  acts_ref, cots_ref, gw_ref, gb_ref, loss_ref, *, inv_m):
-    acts_ref[...] = acts_in[...]
-    cots_ref[...] = cots_in[...]
-    gw_ref[...] = gw_in[...]
-    gb_ref[...] = gb_in[...]
-    loss_ref[...] = loss_in[...]
+    _init_state((acts_in, cots_in, gw_in, gb_in, loss_in),
+                (acts_ref, cots_ref, gw_ref, gb_ref, loss_ref))
     bt, dim = acts_ref.shape[1], acts_ref.shape[2]
     inv_numel = 1.0 / (bt * dim)      # MSE mean over one microbatch output
 
@@ -316,72 +488,28 @@ def _pipe_kernel(desc_ref, w_ref, b_ref, x_ref, y_ref,
         jax.lax.switch(desc_ref[q, 0], (fwd, bwd, upd, noop))
         return carry
 
-    jax.lax.fori_loop(0, desc_ref.shape[0], body, 0)
+    _walk_block(bounds_ref, body)
 
 
 @functools.lru_cache(maxsize=None)
-def pipe_round_fn(inv_m: float, interpret: Optional[bool] = None):
-    """Round executor for the pipeline family:
-    ``(desc_slab, (w, b, x, y), (acts, cots, gw, gb, loss)) -> buffers``.
-    ``w``/``b`` are (S, D, D)/(S, D) stage-parameter stacks, ``x``/``y``
-    (M, Bt, D) microbatch inputs/targets (read-only); the kernel-resident
-    state is the stacked stage-activation (``acts``) and cotangent
-    (``cots``) slabs — flat (S·M, Bt, D), slot = stage·M + micro — plus the
-    grad-accumulation buffers ``gw``/``gb`` and per-micro ``loss`` (M, 1).
-    ``inv_m`` = 1/M is the U branch's microbatch averaging.  Cached per
-    (inv_m, interpret) so the runner's jit cache is shared."""
+def pipe_round_fn(inv_m: float, interpret: Optional[bool] = None,
+                  block_items: int = DEFAULT_BLOCK_ITEMS):
+    """Walk executor for the pipeline family:
+    ``(desc, phase_bounds, (w, b, x, y), (acts, cots, gw, gb, loss)) ->
+    buffers``.  ``w``/``b`` are (S, D, D)/(S, D) stage-parameter stacks,
+    ``x``/``y`` (M, Bt, D) microbatch inputs/targets (read-only); the
+    kernel-resident state is the stacked stage-activation (``acts``) and
+    cotangent (``cots``) slabs — flat (S·M, Bt, D), slot = stage·M +
+    micro — plus the grad-accumulation buffers ``gw``/``gb`` and
+    per-micro ``loss`` (M, 1).  ``inv_m`` = 1/M is the U branch's
+    microbatch averaging.  Cached per (inv_m, interpret, block_items) so
+    the runner's jit cache is shared."""
     interp = _default_interpret(interpret)
     kern = functools.partial(_pipe_kernel, inv_m=float(inv_m))
 
-    def round_fn(desc, statics, buffers):
-        w, b, x, y = statics
-        acts, cots, gw, gb, loss = buffers
-        shapes = (acts, cots, gw, gb, loss)
-        return pl.pallas_call(
-            kern,
-            grid=(),
-            in_specs=[_full_spec(desc.shape), _full_spec(w.shape),
-                      _full_spec(b.shape), _full_spec(x.shape),
-                      _full_spec(y.shape)]
-            + [_full_spec(a.shape) for a in shapes],
-            out_specs=tuple(_full_spec(a.shape) for a in shapes),
-            out_shape=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
-                            for a in shapes),
-            input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4},
-            interpret=interp,
-        )(desc, w, b, x, y, acts, cots, gw, gb, loss)
-
-    return round_fn
-
-
-@functools.lru_cache(maxsize=None)
-def bh_round_fn(eps: float, interpret: Optional[bool] = None):
-    """Round executor for the Barnes-Hut family:
-    ``(desc_slab, (xs, ms), (acc, com, cmass)) -> (acc, com, cmass)``.
-    ``xs``/``ms`` are (L, 3, P)/(L, P) zero-mass-padded leaf blocks
-    (read-only); ``com``/``cmass`` carry one extra zero row as the gather
-    pad target — ragged COM-source lists arrive pre-chunked into ≤8-source
-    PC rows, so there is no side table.  Cached per (eps, interpret) so
-    the runner's jit cache is shared."""
-    interp = _default_interpret(interpret)
-    kern = functools.partial(_bh_kernel, eps=float(eps))
-
-    def round_fn(desc, statics, buffers):
-        xs, ms = statics
-        acc, com, cm = buffers
-        return pl.pallas_call(
-            kern,
-            grid=(),
-            in_specs=[_full_spec(desc.shape), _full_spec(xs.shape),
-                      _full_spec(ms.shape), _full_spec(acc.shape),
-                      _full_spec(com.shape), _full_spec(cm.shape)],
-            out_specs=(_full_spec(acc.shape), _full_spec(com.shape),
-                       _full_spec(cm.shape)),
-            out_shape=(jax.ShapeDtypeStruct(acc.shape, acc.dtype),
-                       jax.ShapeDtypeStruct(com.shape, com.dtype),
-                       jax.ShapeDtypeStruct(cm.shape, cm.dtype)),
-            input_output_aliases={3: 0, 4: 1, 5: 2},
-            interpret=interp,
-        )(desc, xs, ms, acc, com, cm)
+    def round_fn(desc, phase_bounds, statics, buffers):
+        bounds = jnp.asarray(_blocks_of(phase_bounds, block_items),
+                             jnp.int32)
+        return _grid_walk(kern, desc, bounds, statics, buffers, interp)
 
     return round_fn

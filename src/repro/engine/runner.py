@@ -1,16 +1,23 @@
 """Device-resident plan execution: one jitted host dispatch per plan.
 
-``execute_plan`` runs a :class:`~repro.engine.descriptors.TaskTable`
-through a family round function (``repro.engine.megakernel``) as a single
-jitted ``lax.fori_loop`` over rounds — the whole plan becomes one XLA
-program with zero host transitions between rounds, and the state buffers
-are donated so execution is in-place end to end (DESIGN.md §Engine).
+``execute_plan`` runs a ragged :class:`~repro.engine.descriptors.TaskTable`
+through a family walk function (``repro.engine.megakernel``) as a single
+jitted program — the whole plan becomes one XLA program with zero host
+transitions between rounds, and the state buffers are donated so execution
+is in-place end to end (DESIGN.md §Engine).
 
-``fuse_rounds=True`` additionally collapses every round slab into one —
-one megakernel launch for the *entire plan* (a single copy-in/copy-out of
-the state).  This is legal precisely because slab row order already
-serializes rounds and the megakernel walks rows sequentially; it is the
-fastest mode whenever the family state fits the kernel's memory budget.
+Two dispatch shapes, same single host call:
+
+* per-round (default): one grid-walk ``pallas_call`` per non-empty round,
+  unrolled inside the jitted program (each round's CSR slice has its own
+  static shape — raggedness costs nothing at run time, empty rounds
+  disappear entirely);
+* ``fuse_rounds=True``: ONE megakernel launch whose phase grid walks the
+  *entire plan* (a single copy-in/copy-out of the state).  Legal because
+  the global phase order already serializes rounds; it is the fastest mode
+  whenever the family state fits the kernel's memory budget
+  (``benchmarks/engine_dispatch.py`` times both and CI keeps
+  fused ≤ looped).
 
 On CPU runtimes the megakernels run in Pallas interpret mode, so this is
 also the CI path; buffer donation is only requested on backends that
@@ -21,32 +28,60 @@ from __future__ import annotations
 
 import functools
 import time
+from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .descriptors import TaskTable
 
-RoundFn = Callable[[jnp.ndarray, Tuple, Tuple], Tuple]
+# (desc, phase_bounds, statics, buffers) -> buffers; phase_bounds is a
+# static tuple of sub-phase boundaries over desc's rows — the megakernel
+# factories chunk it into the ragged block grid on the host
+RoundFn = Callable[[jnp.ndarray, Tuple[int, ...], Tuple, Tuple], Tuple]
 
 ENGINE_DISPATCHES_PER_PLAN = 1     # the whole point — see BENCH_engine.json
 
-
-def _loop(round_fn: RoundFn, desc, statics, buffers):
-    def body(r, bufs):
-        return round_fn(desc[r], statics, bufs)
-    return jax.lax.fori_loop(0, desc.shape[0], body, buffers)
+# launch segment: (row_start, row_end, phase_bounds relative to row_start)
+Segment = Tuple[int, int, Tuple[int, ...]]
 
 
-@functools.partial(jax.jit, static_argnums=0, donate_argnums=3)
-def _run_donating(round_fn, desc, statics, buffers):
-    return _loop(round_fn, desc, statics, buffers)
+def _round_segments_for(tables: TaskTable, r: int) -> Tuple[Segment, ...]:
+    o0 = int(tables.round_offsets[r])
+    o1 = int(tables.round_offsets[r + 1])
+    if o1 == o0:
+        return ()                  # empty rounds lower to no launch at all
+    bounds = tables.round_phases(r)
+    return ((o0, o1, tuple(int(b) - o0 for b in bounds)),)
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def _run_plain(round_fn, desc, statics, buffers):
-    return _loop(round_fn, desc, statics, buffers)
+def _round_segments(tables: TaskTable) -> Tuple[Segment, ...]:
+    return tuple(s for r in range(tables.nr_rounds)
+                 for s in _round_segments_for(tables, r))
+
+
+def _fused_segments(tables: TaskTable) -> Tuple[Segment, ...]:
+    if tables.nr_items == 0:
+        return ()
+    return ((0, tables.nr_items,
+             tuple(int(b) for b in tables.phase_offsets)),)
+
+
+@functools.lru_cache(maxsize=None)
+def _segment_runner(round_fn: RoundFn, segments: Tuple[Segment, ...],
+                    donate: bool):
+    """Jitted executor for a fixed launch layout.  ``round_fn`` must be a
+    stable object (the megakernel factories are lru-cached) and
+    ``segments`` is derived from host-side table offsets, so repeated
+    executions of structurally identical plans share one compilation."""
+    def run(desc, statics, buffers):
+        for o0, o1, bounds in segments:
+            buffers = round_fn(desc[o0:o1], bounds, statics, buffers)
+        return buffers
+
+    return jax.jit(run, donate_argnums=(2,) if donate else ())
 
 
 def execute_plan(tables: TaskTable, round_fn: RoundFn,
@@ -55,44 +90,105 @@ def execute_plan(tables: TaskTable, round_fn: RoundFn,
                  donate: Optional[bool] = None) -> Tuple:
     """Execute a lowered task table.  ``statics`` are read-only family
     inputs (may be empty); ``buffers`` are the mutable state arrays,
-    threaded round to round and returned.  ``round_fn`` must be a stable
+    threaded launch to launch and returned.  ``round_fn`` must be a stable
     object (the megakernel factories are lru-cached) so repeated calls hit
     the jit cache."""
-    desc = jnp.asarray(tables.desc)
-    if fuse_rounds:
-        desc = desc.reshape(1, -1, desc.shape[-1])
+    statics = tuple(statics)
+    buffers = tuple(buffers)
+    if tables.nr_items == 0:
+        return buffers
     if donate is None:
         donate = jax.default_backend() in ("tpu", "gpu")
-    run = _run_donating if donate else _run_plain
-    return run(round_fn, desc, tuple(statics), tuple(buffers))
+    segments = (_fused_segments(tables) if fuse_rounds
+                else _round_segments(tables))
+    run = _segment_runner(round_fn, segments, bool(donate))
+    return run(jnp.asarray(tables.desc), statics, buffers)
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def _run_one_round(round_fn, desc_r, statics, buffers):
-    return round_fn(desc_r, statics, buffers)
+@functools.lru_cache(maxsize=None)
+def _item_runner(round_fn: RoundFn):
+    """Jitted single-item launch — every item shares the (1, 1+A) shape,
+    so one compilation covers the whole per-item measurement pass."""
+    def run(desc_row, statics, buffers):
+        return round_fn(desc_row, (0, 1), statics, buffers)
+
+    return jax.jit(run)
+
+
+@dataclass
+class RoundTimings:
+    """Measured engine times (``measure_round_times``): ``round_s[r]`` is
+    round ``r``'s wall time (one grid-walk launch per round, 0.0 for empty
+    rounds); ``item_s[q]`` — only with ``per_item=True`` — is flat work
+    item ``q``'s wall time (one single-item launch each, mapping to tasks
+    through ``TaskTable.tids``, the input to
+    ``core.simulator.replay_item_times``).  ``buffers`` is the final state
+    of the last measurement pass (identical for both passes — the walks
+    differ only in launch granularity)."""
+    round_s: List[float]
+    item_s: Optional[np.ndarray]
+    buffers: Tuple
 
 
 def measure_round_times(tables: TaskTable, round_fn: RoundFn,
-                        statics: Sequence, buffers: Sequence,
-                        ) -> Tuple[List[float], Tuple]:
-    """Execute a task table one round slab at a time, timing each launch
+                        statics: Sequence, buffers: Sequence, *,
+                        per_item: bool = False) -> RoundTimings:
+    """Execute a task table one round at a time, timing each launch
     (blocked on completion) — the measured per-round engine times that
     ``core.simulator.replay_round_times`` feeds back into the discrete-
     event model to validate its makespan prediction against the fused
-    single-dispatch execute time (ROADMAP: simulator validation).  The
-    first round is pre-run once as compile warmup (all slabs share one
-    shape, so one compilation covers every round).  Returns
-    ``(seconds_per_round, final_buffers)``."""
+    single-dispatch execute time (ROADMAP: simulator validation).  With
+    ``per_item=True`` an additional pass re-executes the table one *item*
+    at a time, giving each task its own measured cost
+    (``core.simulator.replay_item_times`` replays those into lane-parallel
+    makespans).  Every ragged round shape is pre-run once as compile
+    warmup, so the timings are steady-state.
+
+    Caveat on per-item granularity: each single-item launch pays the full
+    per-launch overhead (dispatch + state copy-in/out), so on hosts where
+    that overhead rivals one item's arithmetic — CPU interpret mode in
+    particular — ``item_s`` is an upper bound skewed toward launch cost,
+    and the replay validates the *model mechanics* (additivity, lane
+    bounds) rather than hardware task costs.  Measuring per-item costs
+    worth trusting on real accelerators is the ROADMAP simulator-
+    validation item."""
     statics = tuple(statics)
-    bufs = tuple(buffers)
+    init = tuple(buffers)
     desc = jnp.asarray(tables.desc)
-    times: List[float] = []
-    if tables.nr_rounds:
-        jax.block_until_ready(
-            _run_one_round(round_fn, desc[0], statics, bufs))  # warmup only
+    runners = {}
     for r in range(tables.nr_rounds):
+        segs = _round_segments_for(tables, r)
+        runners[r] = (_segment_runner(round_fn, segs, False)
+                      if segs else None)
+
+    bufs = init
+    for r in range(tables.nr_rounds):          # compile warmup, all shapes
+        if runners[r] is not None:
+            bufs = runners[r](desc, statics, bufs)
+    jax.block_until_ready(bufs)
+
+    round_s: List[float] = []
+    bufs = init
+    for r in range(tables.nr_rounds):
+        if runners[r] is None:
+            round_s.append(0.0)
+            continue
         t0 = time.perf_counter()
-        bufs = _run_one_round(round_fn, desc[r], statics, bufs)
+        bufs = runners[r](desc, statics, bufs)
         jax.block_until_ready(bufs)
-        times.append(time.perf_counter() - t0)
-    return times, bufs
+        round_s.append(time.perf_counter() - t0)
+
+    item_s = None
+    if per_item:
+        run1 = _item_runner(round_fn)
+        if tables.nr_items:
+            jax.block_until_ready(
+                run1(desc[0:1], statics, init))          # compile warmup
+        bufs = init
+        item_s = np.zeros(tables.nr_items, np.float64)
+        for q in range(tables.nr_items):
+            t0 = time.perf_counter()
+            bufs = run1(desc[q:q + 1], statics, bufs)
+            jax.block_until_ready(bufs)
+            item_s[q] = time.perf_counter() - t0
+    return RoundTimings(round_s=round_s, item_s=item_s, buffers=bufs)

@@ -233,9 +233,10 @@ def _engine_hooks(stage_params, microbatches, fam, out_box) -> EngineHooks:
         out_box["grads"] = [{"w": gw[k], "b": gb[k]} for k in range(S)]
 
     return EngineHooks(
-        arg_width=engine.PIPE_ARG_WIDTH, pad_type=engine.PIPE_NOOP,
+        arg_width=engine.PIPE_ARG_WIDTH,
         round_fn=engine.pipe_round_fn(1.0 / M), statics=statics,
-        buffers=buffers, writeback=writeback)
+        buffers=buffers, writeback=writeback,
+        row_access=engine.pipe_row_access)
 
 
 def pipelined_value_and_grad_plan(

@@ -30,7 +30,8 @@ from repro.apps import barneshut as bh
 from repro.apps import qr
 from repro.core import (Backend, BackendUnsupported, BatchSpec, EngineHooks,
                         QSched, available_backends, get_backend, lower,
-                        register_backend, replay_round_times, run_plan)
+                        register_backend, replay_item_times,
+                        replay_round_times, run_plan)
 from repro.pipeline import synthesize_schedule
 from repro.pipeline.exec import (dense_stage, mse_loss,
                                  pipelined_value_and_grad,
@@ -84,7 +85,7 @@ class TestRegistry:
         no_enc = {0: BatchSpec(run_one=lambda tid, d: None)}
         enc = {0: BatchSpec(run_one=lambda tid, d: None,
                             encode=lambda tid, d: [(0, 0)])}
-        hooks = EngineHooks(arg_width=1, pad_type=1, round_fn=None,
+        hooks = EngineHooks(arg_width=1, round_fn=None,
                             statics=tuple, buffers=tuple,
                             writeback=lambda out: None)
         assert not be.supports(plan, s, enc, None)       # no family hooks
@@ -302,14 +303,15 @@ class TestSimulatorReplay:
         state = qr._TileState(dict(tiles), "pallas")
         tables = engine.lower_tables(
             plan, sched, state.batch_registry(),
-            arg_width=engine.QR_ARG_WIDTH, pad_type=engine.QR_NOOP)
+            arg_width=engine.QR_ARG_WIDTH, row_access=engine.qr_row_access)
         stack = jnp.stack([tiles[i, j]
                            for j in range(nt) for i in range(mt)])
         fn = engine.qr_round_fn()
         round_times = None
         for _ in range(3):      # elementwise best-of-3 absorbs CI jitter
-            times, _ = engine.measure_round_times(
+            timings = engine.measure_round_times(
                 tables, fn, (), (stack, jnp.zeros_like(stack)))
+            times = timings.round_s
             round_times = (times if round_times is None
                            else [min(a_, b_)
                                  for a_, b_ in zip(round_times, times)])
@@ -333,6 +335,50 @@ class TestSimulatorReplay:
         assert 0.2 <= ratio <= 5.0, (
             f"predicted {res.makespan:.4f}s vs measured {measured:.4f}s "
             f"(ratio {ratio:.2f})")
+
+    def test_per_item_times_replay_lane_parallel_makespans(self):
+        """Per-item measurements (``measure_round_times(per_item=True)``)
+        give every task its own measured cost, so ``replay_item_times``
+        can predict *parallel* makespans (ROADMAP: simulator validation
+        beyond one worker).  Model consistency bounds: the 1-worker replay
+        is exactly Σ item times; a 4-worker replay can be no better than
+        the critical path and no worse than serial."""
+        a = jnp.asarray(np.random.default_rng(1).standard_normal((96, 96)),
+                        jnp.float32)
+        tiles, mt, nt = qr._split_tiles(a, 32)
+        sched, _ = qr.make_qr_graph(mt, nt, nr_queues=4)
+        plan = lower(sched, 4)
+        state = qr._TileState(dict(tiles), "pallas")
+        tables = engine.lower_tables(
+            plan, sched, state.batch_registry(),
+            arg_width=engine.QR_ARG_WIDTH, row_access=engine.qr_row_access)
+        stack = jnp.stack([tiles[i, j]
+                           for j in range(nt) for i in range(mt)])
+        timings = engine.measure_round_times(
+            tables, engine.qr_round_fn(), (),
+            (stack, jnp.zeros_like(stack)), per_item=True)
+        assert timings.item_s is not None
+        assert len(timings.item_s) == tables.nr_items
+        assert (timings.item_s > 0).all()
+
+        serial = replay_item_times(sched, tables.tids, timings.item_s,
+                                   nr_workers=1)
+        assert serial.makespan == pytest.approx(float(timings.item_s.sum()),
+                                                rel=1e-9)
+        par = replay_item_times(sched, tables.tids, timings.item_s,
+                                nr_workers=4)
+        assert par.makespan <= serial.makespan + 1e-12
+        # per-task measured costs: the longest task bounds any makespan
+        per_task = np.zeros(sched.nr_tasks)
+        np.add.at(per_task, np.asarray(tables.tids), timings.item_s)
+        assert par.makespan >= per_task.max() - 1e-12
+
+    def test_replay_item_times_validates_lengths(self):
+        s, _ = qr.make_qr_graph(3, 3)
+        with pytest.raises(ValueError, match="item times"):
+            replay_item_times(s, [0, 1], [0.1])
+        with pytest.raises(ValueError, match="out of range"):
+            replay_item_times(s, [s.nr_tasks], [0.1])
 
     def test_replay_restores_costs(self):
         s, _ = qr.make_qr_graph(4, 4)

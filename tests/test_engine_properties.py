@@ -1,22 +1,24 @@
-"""Conflict-freedom as a property (hypothesis): over randomized task
-forests — random dependency DAGs locking random resources in random
-resource forests — no ``ExecutionPlan`` round and no engine descriptor
-slab ever co-schedules two tasks whose locked resource subtrees overlap.
+"""Conflict-freedom and phase-coloring as properties (hypothesis): over
+randomized task forests — random dependency DAGs locking random resources
+in random resource forests — no ``ExecutionPlan`` round and no engine
+round slice ever co-schedules two tasks whose locked resource subtrees
+overlap, and the write-coloring pass never co-phases two work items that
+touch a common state row.
 
-This is the invariant everything downstream leans on: the rounds mode may
-dispatch a round's batches in any order, and the engine megakernel walks a
-slab sequentially but could legally walk it in parallel, precisely because
-no two tasks of a slab can touch the same resource subtree (DESIGN.md
-§Engine)."""
+These are the invariants everything downstream leans on: the rounds mode
+may dispatch a round's batches in any order, and the engine megakernel may
+walk a sub-phase's item blocks in any order — or in parallel grid
+programs — precisely because no two tasks of a round touch the same
+resource subtree and no two items of a phase touch the same state row
+(DESIGN.md §Engine, "Ragged tables & grid walk")."""
 
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro import engine
-from repro.core import FLAG_VIRTUAL, BatchSpec, QSched, lower
+from repro.core import FLAG_VIRTUAL, BatchSpec, QSched, color_phases, lower
 
 N_TYPES = 3
-PAD = N_TYPES
 
 
 @st.composite
@@ -81,28 +83,27 @@ def _assert_subtrees_disjoint(sched, parents, tids, what):
 
 @given(task_forests(), st.integers(1, 6))
 @settings(max_examples=60, deadline=None)
-def test_plan_rounds_and_engine_slabs_conflict_free(forest, nr_lanes):
+def test_plan_rounds_and_engine_slices_conflict_free(forest, nr_lanes):
     sched, parents = forest
     plan = lower(sched, nr_lanes, cache=False)
     registry = {tt: BatchSpec(
         run_one=lambda tid, data: None,
         encode=lambda tid, data, tt=tt: [(tt, tid)])
         for tt in range(N_TYPES)}
-    tables = engine.lower_tables(plan, sched, registry,
-                                 arg_width=1, pad_type=PAD)
+    tables = engine.lower_tables(plan, sched, registry, arg_width=1)
     assert tables.nr_rounds == plan.nr_rounds
 
     flags = sched._tflags
     seen = []
     for r, rnd in enumerate(plan.rounds):
         _assert_subtrees_disjoint(sched, parents, rnd.tids, f"round {r}")
-        slab_tids = tables.round_tids(r)
-        _assert_subtrees_disjoint(sched, parents, set(slab_tids),
-                                  f"slab {r}")
-        # a slab holds exactly its round's non-virtual tasks
+        slice_tids = tables.round_tids(r)
+        _assert_subtrees_disjoint(sched, parents, set(slice_tids),
+                                  f"slice {r}")
+        # a round's CSR slice holds exactly its non-virtual tasks
         expect = sorted(t for t in rnd.tids if not flags[t] & FLAG_VIRTUAL)
-        assert sorted(set(slab_tids)) == expect
-        seen += slab_tids
+        assert sorted(set(slice_tids)) == expect
+        seen += slice_tids
     # every non-virtual task encoded exactly once (1 row/task registry)
     assert sorted(seen) == [t for t in range(sched.nr_tasks)
                             if not flags[t] & FLAG_VIRTUAL]
@@ -110,17 +111,96 @@ def test_plan_rounds_and_engine_slabs_conflict_free(forest, nr_lanes):
 
 @given(task_forests())
 @settings(max_examples=30, deadline=None)
-def test_slab_pads_are_noops(forest):
+def test_tables_are_ragged_with_no_pad_rows(forest):
+    """CSR invariants: rounds partition the flat row array exactly, every
+    row carries a real engine type (the no-op types exist only as the
+    kernels' defensive clamp branch), and phases partition each round."""
     sched, _ = forest
     plan = lower(sched, 2, cache=False)
     registry = {tt: BatchSpec(
         run_one=lambda tid, data: None,
         encode=lambda tid, data, tt=tt: [(tt, tid)])
         for tt in range(N_TYPES)}
-    tables = engine.lower_tables(plan, sched, registry,
-                                 arg_width=1, pad_type=PAD)
+    tables = engine.lower_tables(plan, sched, registry, arg_width=1)
+    assert tables.stats["pad_rows"] == 0
+    assert tables.stats["pad_fraction"] == 0.0
+    assert int(tables.round_offsets[-1]) == tables.nr_items
+    assert (tables.desc[:, 0] < N_TYPES).all()
+    assert int(tables.round_lengths.sum()) == tables.nr_items
     for r in range(tables.nr_rounds):
-        w = int(tables.lengths[r])
-        assert (tables.desc[r, w:, 0] == PAD).all()
-        assert (tables.tids[r, w:] == -1).all()
-        assert (tables.desc[r, :w, 0] < PAD).all()
+        bounds = tables.round_phases(r).tolist()
+        assert bounds[0] == int(tables.round_offsets[r])
+        assert bounds[-1] == int(tables.round_offsets[r + 1])
+        assert all(b1 > b0 for b0, b1 in zip(bounds, bounds[1:]))
+
+
+@st.composite
+def access_sequences(draw):
+    """Random (reads, writes) item sequences over a small key space, with
+    deliberate destination collisions (the accumulation-row shape)."""
+    n = draw(st.integers(0, 30))
+    items = []
+    for _ in range(n):
+        writes = draw(st.lists(st.integers(0, 5), min_size=1, max_size=2,
+                               unique=True))
+        reads = draw(st.lists(st.integers(0, 5), max_size=3, unique=True))
+        items.append((tuple(reads), tuple(writes)))
+    return items
+
+
+@given(access_sequences())
+@settings(max_examples=80, deadline=None)
+def test_color_phases_invariants(items):
+    """The write-coloring pass: phases are contiguous and cover the items
+    exactly; within a phase no two items share a write key and no item
+    reads a key another writes; items that conflict keep their original
+    relative order (strictly increasing phase), so per-destination
+    accumulation order is preserved."""
+    bounds = color_phases(items)
+    assert bounds[0] == 0 and bounds[-1] == len(items)
+    assert all(b1 > b0 for b0, b1 in zip(bounds, bounds[1:]))
+
+    phase_of = {}
+    for p, (b0, b1) in enumerate(zip(bounds, bounds[1:])):
+        reads, writes = set(), set()
+        for i in range(b0, b1):
+            r, w = set(items[i][0]), set(items[i][1])
+            assert not (w & writes), "write/write overlap within a phase"
+            assert not (w & reads) and not (r & writes), \
+                "read/write overlap within a phase"
+            reads |= r
+            writes |= w
+            phase_of[i] = p
+    for i in range(len(items)):
+        ri, wi = set(items[i][0]), set(items[i][1])
+        for j in range(i + 1, len(items)):
+            rj, wj = set(items[j][0]), set(items[j][1])
+            if (wi & wj) or (wi & rj) or (ri & wj):
+                assert phase_of[i] < phase_of[j], \
+                    "conflicting items must keep their order across phases"
+
+
+@given(task_forests(), st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_lowered_phases_respect_row_access(forest, nr_lanes):
+    """End to end through ``lower_tables``: with a row-access map that
+    collides tasks onto a tiny destination space, no two items of any
+    lowered sub-phase share a destination row."""
+    sched, _ = forest
+    plan = lower(sched, nr_lanes, cache=False)
+    registry = {tt: BatchSpec(
+        run_one=lambda tid, data: None,
+        encode=lambda tid, data, tt=tt: [(tt, tid, tid % 3)])
+        for tt in range(N_TYPES)}
+
+    def row_access(row):
+        return (), (row[2],)     # destination = tid % 3
+
+    tables = engine.lower_tables(plan, sched, registry, arg_width=2,
+                                 row_access=row_access)
+    for r in range(tables.nr_rounds):
+        bounds = tables.round_phases(r).tolist()
+        for b0, b1 in zip(bounds, bounds[1:]):
+            dests = [int(tables.desc[q, 2]) for q in range(b0, b1)]
+            assert len(dests) == len(set(dests)), \
+                "destination row repeated within one sub-phase"
