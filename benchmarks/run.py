@@ -11,7 +11,7 @@ import traceback
 
 SECTIONS = ("sched_overhead", "engine_dispatch", "qr_scaling", "bh_scaling",
             "priority_ablation", "conflict_ablation", "pipeline_bubble",
-            "kernels", "roofline")
+            "serving", "kernels", "roofline")
 
 
 def main() -> None:

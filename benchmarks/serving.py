@@ -1,0 +1,142 @@
+"""Continuous batching vs the seed's static-batch serving loop.
+
+The static loop (``launch/serve.py``'s original shape) prefills a fixed
+batch and decodes every member until the *slowest* one finishes; with a
+ragged distribution of generation budgets most decode positions in most
+steps are wasted work.  The continuous service retires a request the step
+its budget is met and admits the next queued request into the freed slot,
+so decode batches stay full of useful work.  Both paths run the same
+model, same requests, same greedy decoding; the figure of merit is
+sustained useful tokens/sec after warmup (the services stay persistent —
+all entry points compiled — and the second replay is timed).
+
+Writes ``BENCH_serve.json`` at the repo root; CI floors
+``speedup >= 1.0`` at smoke size (continuous must never lose to static).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm, serving
+from repro.serve import GenerateService
+from repro.serve.traffic import open_loop_trace, replay
+from repro.trainer.steps import make_serve_step
+
+from .common import FULL, SMOKE, emit
+
+ARCH = "qwen3-1.7b"
+
+if SMOKE:
+    N_REQ, MAX_BATCH, PLEN = 12, 4, 8
+    NEW_CHOICES = (1, 2, 4, 32)
+elif FULL:
+    N_REQ, MAX_BATCH, PLEN = 48, 8, 16
+    NEW_CHOICES = (4, 8, 16, 32)
+else:
+    N_REQ, MAX_BATCH, PLEN = 24, 4, 8
+    NEW_CHOICES = (2, 4, 8, 32)
+
+PAGE = 8
+MAX_SEQ = -(-(PLEN + max(NEW_CHOICES) - 1) // PAGE) * PAGE
+
+
+def make_static_prefill(cfg):
+    """Jitted batch prefill + cache pad for the static baseline (so the
+    comparison isolates the scheduling discipline, not compilation)."""
+
+    @jax.jit
+    def fn(params, tokens):
+        logits, cache, pos = serving.prefill(params, cfg, tokens)
+        if cfg.family != "ssm":
+            pad = [(0, 0)] * cache[next(iter(cache))].ndim
+            pad[2] = (0, MAX_SEQ - PLEN)
+            cache = {k: jnp.pad(v, pad) for k, v in cache.items()}
+        return jnp.argmax(logits, -1)[:, None], cache, pos
+
+    return fn
+
+
+def static_batch_run(params, cfg, static_prefill, serve_step, trace):
+    """The seed loop: waves of MAX_BATCH, each wave prefilled together and
+    decoded until its slowest member finishes."""
+    out_tokens = 0
+    for w0 in range(0, len(trace), MAX_BATCH):
+        wave = trace[w0:w0 + MAX_BATCH]
+        tokens = jnp.asarray(np.stack([r.prompt for r in wave]))
+        tok, cache, pos = static_prefill(params, tokens)
+        for _ in range(max(r.max_new_tokens for r in wave) - 1):
+            logits, cache = serve_step(params, cache, tok, pos)
+            tok = jnp.argmax(logits, -1)[:, None]
+            pos = pos + 1
+        jax.block_until_ready(tok)
+        out_tokens += sum(r.max_new_tokens for r in wave)  # useful only
+    return out_tokens
+
+
+def main() -> None:
+    cfg = get_config(ARCH).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    trace = open_loop_trace(N_REQ, mean_interarrival=0.0,
+                            prompt_lens=(PLEN,), new_token_lens=NEW_CHOICES,
+                            vocab_size=cfg.vocab, seed=7)
+    useful = sum(r.max_new_tokens for r in trace)
+    waves = [trace[i:i + MAX_BATCH] for i in range(0, len(trace), MAX_BATCH)]
+    static_steps = sum(max(r.max_new_tokens for r in w) for w in waves)
+
+    # static baseline: jit once, warm on the first replay, time the second
+    serve_step = jax.jit(make_serve_step(cfg))
+    static_prefill = make_static_prefill(cfg)
+    static_batch_run(params, cfg, static_prefill, serve_step, trace)
+    t0 = time.perf_counter()
+    static_batch_run(params, cfg, static_prefill, serve_step, trace)
+    t_static = time.perf_counter() - t0
+
+    # continuous service: persistent instance, every entry point compiled
+    # by the warmup replay, second replay timed
+    svc = GenerateService(params, cfg, max_batch=MAX_BATCH,
+                          max_seq=MAX_SEQ, page_size=PAGE)
+    replay(svc, trace)
+    warm_stats = dict(svc.stats)
+    t0 = time.perf_counter()
+    handles = replay(svc, trace)
+    t_cont = time.perf_counter() - t0
+    assert all(h.done and len(h.generated) == r.max_new_tokens
+               for h, r in zip(handles, sorted(trace,
+                                               key=lambda r: r.arrival_step)))
+
+    cont_steps = svc.stats["steps"] - warm_stats["steps"]
+    out = {
+        "arch": ARCH,
+        "workload": {"n_requests": N_REQ, "max_batch": MAX_BATCH,
+                     "prompt_len": PLEN, "new_token_choices": NEW_CHOICES,
+                     "useful_tokens": useful},
+        "static": {"wall_s": t_static, "tok_s": useful / t_static,
+                   "decode_steps": static_steps,
+                   "decode_items": static_steps * MAX_BATCH},
+        "continuous": {"wall_s": t_cont, "tok_s": useful / t_cont,
+                       "decode_steps": cont_steps,
+                       "decode_items": svc.stats["decode_items"]
+                       - warm_stats["decode_items"],
+                       "entry_points": svc.compiled_entry_points()},
+        "speedup": t_static / t_cont,
+    }
+    emit("serve_static_tok_s", t_static / useful * 1e6,
+         f"tok_s={out['static']['tok_s']:.1f} steps={static_steps}")
+    emit("serve_continuous_tok_s", t_cont / useful * 1e6,
+         f"tok_s={out['continuous']['tok_s']:.1f} steps={cont_steps} "
+         f"speedup={out['speedup']:.2f}x")
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    emit("serve_json", 0, str(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -42,14 +42,25 @@ from .graph import FLAG_VIRTUAL, QSched
 
 _PLAN_CACHE: "Dict[Tuple[str, int, Optional[int]], ExecutionPlan]" = {}
 _PLAN_CACHE_MAX = 64
+_PLAN_CACHE_HITS = 0
+_PLAN_CACHE_MISSES = 0
 
 
 def clear_plan_cache() -> None:
+    global _PLAN_CACHE_HITS, _PLAN_CACHE_MISSES
     _PLAN_CACHE.clear()
+    _PLAN_CACHE_HITS = 0
+    _PLAN_CACHE_MISSES = 0
 
 
 def plan_cache_info() -> Dict[str, int]:
-    return {"entries": len(_PLAN_CACHE), "max": _PLAN_CACHE_MAX}
+    """Cache occupancy plus hit/miss counters since the last
+    ``clear_plan_cache``.  The counters are how the serving tier asserts
+    its compiled-module-registry behaviour: admission/decode rounds with
+    an already-seen batch shape must be cache hits (``tests/test_serve.py``
+    plan-cache regression)."""
+    return {"entries": len(_PLAN_CACHE), "max": _PLAN_CACHE_MAX,
+            "hits": _PLAN_CACHE_HITS, "misses": _PLAN_CACHE_MISSES}
 
 
 @dataclass(frozen=True)
@@ -209,6 +220,7 @@ def lower(sched: QSched, nr_lanes: int,
     existing plan without re-lowering."""
     if not sched._is_prepared():
         sched.prepare()
+    global _PLAN_CACHE_HITS, _PLAN_CACHE_MISSES
     shash = sched.structural_hash() if cache else ""
     if cache:
         key = (shash, nr_lanes, max_tasks_per_round)
@@ -216,7 +228,9 @@ def lower(sched: QSched, nr_lanes: int,
         if hit is not None:
             _PLAN_CACHE.pop(key)       # LRU: refresh on hit
             _PLAN_CACHE[key] = hit
+            _PLAN_CACHE_HITS += 1
             return hit
+        _PLAN_CACHE_MISSES += 1
     plan = _lower(sched, nr_lanes, max_tasks_per_round, shash)
     if cache:
         if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:

@@ -1,14 +1,61 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with a
-donated KV/state cache.
+"""Serving drivers.
+
+Static batch (the original loop): prefill a batch of prompts, then decode
+with a donated KV/state cache until the slowest member finishes.
 
     PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
         --reduced --batch 4 --prompt-len 16 --new-tokens 32
+
+Continuous batching (``--continuous``): the ``repro.serve`` service — a
+paged block pool, admission lowered as a QuickSched conflict round, and
+engine-backed batched decode with per-step join/leave.  ``--new-tokens``
+becomes the *maximum* budget; per-request budgets are drawn ragged so
+requests actually retire mid-stream.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --reduced --continuous --batch 4 --prompt-len 8 --new-tokens 32
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+
+
+def _continuous_main(args) -> None:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve import GenerateService
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    page = 8
+    max_seq = -(-(args.prompt_len + args.new_tokens - 1) // page) * page
+    svc = GenerateService(params, cfg, max_batch=args.batch,
+                          max_seq=max_seq, page_size=page)
+    rng = np.random.default_rng(args.seed)
+    n_req = 3 * args.batch
+    handles = []
+    for _ in range(n_req):
+        prompt = rng.integers(0, cfg.vocab, args.prompt_len, dtype=np.int32)
+        budget = int(rng.choice([args.new_tokens // 8 or 1,
+                                 args.new_tokens // 2 or 1, args.new_tokens]))
+        handles.append(svc.submit(prompt, budget))
+    t0 = time.time()
+    svc.run_until_complete()
+    dt = time.time() - t0
+    done = svc.stats["generated_tokens"]
+    print(f"continuous: {n_req} requests, {done} tokens in "
+          f"{svc.stats['steps']} steps, {dt:.2f}s ({done / dt:.1f} tok/s)")
+    print(f"entry points: {svc.compiled_entry_points()}")
+    print("greedy continuations (token ids):")
+    for h in handles[:4]:
+        print(f"  rid={h.rid} n={len(h.generated)}:", h.generated[:16])
 
 
 def main() -> None:
@@ -19,7 +66,12 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="run the repro.serve continuous-batching service")
     args = ap.parse_args()
+    if args.continuous:
+        _continuous_main(args)
+        return
 
     import jax
     import jax.numpy as jnp

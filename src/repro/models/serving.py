@@ -76,6 +76,25 @@ def init_cache(cfg, batch: int, max_seq: int) -> Params:
 # prefill — forward over the prompt, emitting the cache
 # =============================================================================
 
+def _prefill_attn(lp, cfg, h, positions):
+    """The attention/KV half every prefill block shares (dense, leading-
+    dense MoE and MoE blocks are identical up to the FFN): pre-norm
+    attention — MLA latent or standard KV — with residual add.  Returns
+    ``(h + attn, kv_cache_leaf)``; the cache leaf layout matches
+    ``init_cache`` for the family (guarded token-for-token by
+    ``tests/test_serve.py``)."""
+    hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+    if cfg.mla:
+        a, lat = mla_mod.mla_attention(lp["attn"], cfg, hn, positions,
+                                       return_latent=True)
+        kv = {"c_kv": lat[0], "k_rope": lat[1]}
+    else:
+        a, (k, v) = attention(lp["attn"], cfg, hn, positions,
+                              return_kv=True)
+        kv = {"k": k, "v": v}
+    return h + a, kv
+
+
 def prefill(params: Params, cfg, tokens: jnp.ndarray,
             extra: Optional[Dict[str, jnp.ndarray]] = None):
     """tokens (B,S) → (last-token logits (B,V), cache, next_pos (B,))."""
@@ -93,52 +112,21 @@ def prefill(params: Params, cfg, tokens: jnp.ndarray,
             return hh, cache_l
         return _scan_or_unroll(cfg, body, h, stack)
 
+    def blk_dense(lp, h):
+        h, kv = _prefill_attn(lp, cfg, h, positions)
+        h = h + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
+        return h, kv
+
+    def blk_moe(lp, h):
+        h, kv = _prefill_attn(lp, cfg, h, positions)
+        y, _ = moe_mod.moe_apply(lp["moe"], cfg,
+                                 rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
+        return h + y, kv
+
     cache: Params
     if fam in ("dense", "vlm"):
-        def blk(lp, h):
-            hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
-            if cfg.mla:
-                a, lat = mla_mod.mla_attention(lp["attn"], cfg, hn, positions,
-                                               return_latent=True)
-                kv = {"c_kv": lat[0], "k_rope": lat[1]}
-            else:
-                a, (k, v) = attention(lp["attn"], cfg, hn, positions,
-                                      return_kv=True)
-                kv = {"k": k, "v": v}
-            h = h + a
-            h = h + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
-            return h, kv
-        x, cache = scan_emit(blk, params["layers"], x)
+        x, cache = scan_emit(blk_dense, params["layers"], x)
     elif fam == "moe":
-        def blk_dense(lp, h):
-            hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
-            if cfg.mla:
-                a, lat = mla_mod.mla_attention(lp["attn"], cfg, hn, positions,
-                                               return_latent=True)
-                kv = {"c_kv": lat[0], "k_rope": lat[1]}
-            else:
-                a, (k, v) = attention(lp["attn"], cfg, hn, positions,
-                                      return_kv=True)
-                kv = {"k": k, "v": v}
-            h = h + a
-            h = h + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
-            return h, kv
-
-        def blk_moe(lp, h):
-            hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
-            if cfg.mla:
-                a, lat = mla_mod.mla_attention(lp["attn"], cfg, hn, positions,
-                                               return_latent=True)
-                kv = {"c_kv": lat[0], "k_rope": lat[1]}
-            else:
-                a, (k, v) = attention(lp["attn"], cfg, hn, positions,
-                                      return_kv=True)
-                kv = {"k": k, "v": v}
-            h = h + a
-            y, _ = moe_mod.moe_apply(lp["moe"], cfg,
-                                     rmsnorm(lp["mlp_norm"], h, cfg.norm_eps))
-            return h + y, kv
-
         caches = []
         if cfg.first_dense_layers:
             x, c0 = scan_emit(blk_dense, params["dense_layers"], x)

@@ -1,0 +1,17 @@
+"""Continuous-batching serving tier on the QuickSched execution stack.
+
+``blockpool`` owns paged cache memory (pages as hierarchical resources,
+admission as a conflict round), ``service`` runs the persistent
+prefill/decode loop through the core backends, and ``traffic`` generates
+open-loop synthetic request streams for the serving benchmark.
+"""
+
+from .blockpool import AdmissionConflict, BlockPool, TT_PREFILL
+from .service import ENG_DECODE, GenerateService, Request, TT_DECODE
+from .traffic import SyntheticRequest, open_loop_trace
+
+__all__ = [
+    "AdmissionConflict", "BlockPool", "TT_PREFILL",
+    "ENG_DECODE", "GenerateService", "Request", "TT_DECODE",
+    "SyntheticRequest", "open_loop_trace",
+]

@@ -16,6 +16,7 @@ import os
 import pathlib
 
 _HYPOTHESIS_SUITES = [
+    "test_blockpool_properties.py",
     "test_core_locks.py",
     "test_core_sched.py",
     "test_engine_properties.py",

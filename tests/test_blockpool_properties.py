@@ -1,0 +1,124 @@
+"""Property tests for the serving block pool (hypothesis; skipped via
+conftest ``collect_ignore`` when hypothesis is absent).
+
+The pool's safety contract, driven with random alloc/free/admission
+traces:
+
+* page conservation — allocated + free == pool size after every op;
+* ownership disjointness — no page is ever held by two live owners;
+* every admission batch from a correct allocator lowers to a single
+  conflict-free round whose write coloring is one phase;
+* a *forged* double assignment (bypassing ``alloc``) forces the planner
+  to split rounds and ``plan_admission`` refuses it — canonical
+  relabelling never masks a real conflict.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.plan import color_phases, lower
+from repro.serve.blockpool import AdmissionConflict, BlockPool
+
+
+# one trace op: (kind, payload) — sizes resolved against pool state at
+# replay time so traces stay valid regardless of interleaving
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "free", "admit"]),
+              st.integers(min_value=1, max_value=5)),
+    min_size=1, max_size=40)
+
+
+def _replay(n_pages, ops):
+    """Drive a pool through a trace, checking invariants after every op.
+    Returns the pool and the live allocation map."""
+    pool = BlockPool(n_pages, page_size=4)
+    live = {}                       # owner -> pages
+    next_owner = 0
+    for kind, size in ops:
+        if kind == "alloc":
+            if pool.can_admit(size):
+                live[next_owner] = pool.alloc(size, owner=next_owner)
+                next_owner += 1
+        elif kind == "free" and live:
+            owner = sorted(live)[size % len(live)]
+            pool.free(live.pop(owner))
+        elif kind == "admit":
+            batch = []
+            while len(batch) < size and pool.can_admit(2):
+                batch.append(pool.alloc(2, owner=next_owner))
+                live[next_owner] = batch[-1]
+                next_owner += 1
+            if batch:
+                sched, plan = pool.plan_admission(batch)
+                assert plan.nr_rounds == 1
+        pool.check_invariants()
+        claimed = [p for pages in live.values() for p in pages]
+        assert len(claimed) == len(set(claimed)), \
+            "a page is held by two live owners"
+        assert pool.allocated == len(claimed)
+        for owner, pages in live.items():
+            assert all(pool.owner_of(p) == owner for p in pages)
+    return pool, live
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_OPS, n_pages=st.integers(min_value=4, max_value=24))
+def test_trace_preserves_invariants(ops, n_pages):
+    _replay(n_pages, ops)
+
+
+@settings(max_examples=60, deadline=None)
+@given(sizes=st.lists(st.integers(min_value=1, max_value=4),
+                      min_size=1, max_size=6))
+def test_admission_is_one_conflict_free_round(sizes):
+    """Disjoint allocations always admit as one round / one phase, both
+    through the planner and through the independent write coloring."""
+    pool = BlockPool(sum(sizes), page_size=4)
+    batch = [pool.alloc(s, owner=i) for i, s in enumerate(sizes)]
+    sched, accesses = pool.admission_sched(batch)
+    plan = lower(sched, 1)
+    assert plan.nr_rounds == 1
+    assert len(color_phases(accesses)) - 1 <= 1
+    pool.plan_admission(batch)      # must not raise
+
+
+@settings(max_examples=60, deadline=None)
+@given(sizes=st.lists(st.integers(min_value=1, max_value=4),
+                      min_size=2, max_size=6),
+       a=st.integers(min_value=0), b=st.integers(min_value=0))
+def test_forged_overlap_is_refused(sizes, a, b):
+    """Hand the same page to two requests (bypassing alloc): the lowered
+    plan needs >1 round and plan_admission raises — relabelling is
+    injective, so canonicalisation cannot hide the conflict."""
+    a, b = a % len(sizes), b % len(sizes)
+    if a == b:
+        b = (a + 1) % len(sizes)
+    pool = BlockPool(sum(sizes), page_size=4)
+    batch = [pool.alloc(s, owner=i) for i, s in enumerate(sizes)]
+    batch[b] = list(batch[b]) + [batch[a][0]]       # forged double use
+    sched, accesses = pool.admission_sched(batch)
+    assert lower(sched, 1).nr_rounds > 1
+    assert len(color_phases(accesses)) - 1 > 1
+    with pytest.raises(AdmissionConflict):
+        pool.plan_admission(batch)
+
+
+def test_exhaustion_and_double_free():
+    pool = BlockPool(4, page_size=4)
+    pages = pool.alloc(4, owner="r0")
+    assert not pool.can_admit(1)
+    with pytest.raises(MemoryError):
+        pool.alloc(1, owner="r1")
+    pool.free(pages)
+    with pytest.raises(ValueError):
+        pool.free(pages)            # double free is rejected
+    pool.check_invariants()
+
+
+def test_lifo_reuse():
+    """Most-recently-freed pages are handed out first (hot reuse)."""
+    pool = BlockPool(8, page_size=4)
+    first = pool.alloc(2, owner="a")
+    pool.free(first)
+    again = pool.alloc(2, owner="b")
+    assert set(again) == set(first)

@@ -1,0 +1,127 @@
+"""Serving-tier conformance and plan-cache regression tests.
+
+* **Token-for-token conformance**: the continuous-batching service —
+  paged block pool, admission as a QuickSched conflict round, engine-run
+  batched decode with requests joining and leaving mid-stream — must
+  produce exactly the token stream the sequential
+  ``serving.prefill``/``decode_step`` reference produces per request, for
+  one arch of each supported family (dense, MoE+MLA, SSM).
+* **Plan cache as compiled-module registry**: repeated batch shapes must
+  hit ``core.plan``'s structural-hash cache; a new shape must miss
+  exactly once (asserted via ``plan_cache_info()``).
+* Admission safety + family gating edge cases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.plan import clear_plan_cache, plan_cache_info
+from repro.models import lm, serving
+from repro.serve import AdmissionConflict, BlockPool, GenerateService
+
+MAX_SEQ = 24
+PLENS = (5, 7, 5, 9, 5)
+BUDGETS = (4, 9, 2, 6, 1)       # ragged, incl. a prompt-only request
+
+
+def _reference_tokens(params, cfg, prompt, n_new):
+    """Sequential single-request greedy reference: one prefill, then
+    B=1 ``decode_step`` against a dense (non-paged) cache."""
+    logits, cache, pos = serving.prefill(params, cfg, prompt[None])
+    if cfg.family != "ssm":
+        cache = {k: jnp.pad(v, [(0, 0), (0, 0), (0, MAX_SEQ - v.shape[2])]
+                            + [(0, 0)] * (v.ndim - 3))
+                 for k, v in cache.items()}
+    toks = [int(np.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        logits, cache = serving.decode_step(
+            params, cfg, cache, jnp.asarray([[toks[-1]]], jnp.int32), pos)
+        toks.append(int(np.argmax(logits[0])))
+        pos = pos + 1
+    return toks
+
+
+@pytest.mark.parametrize("arch,over", [
+    ("qwen3-1.7b", {}),                             # dense
+    ("deepseek-v3-671b", {"capacity_factor": 8.0}),  # moe + mla
+    ("falcon-mamba-7b", {}),                        # ssm
+])
+def test_continuous_matches_sequential_reference(arch, over):
+    cfg = get_config(arch).reduced(**over)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=pl, dtype=np.int32)
+               for pl in PLENS]
+    # max_batch < n_requests forces mid-stream joins as early requests
+    # retire; ragged budgets force mid-stream leaves
+    svc = GenerateService(params, cfg, max_batch=3, max_seq=MAX_SEQ,
+                          page_size=4)
+    handles = [svc.submit(p, n) for p, n in zip(prompts, BUDGETS)]
+    svc.run_until_complete()
+    for h, p, n in zip(handles, prompts, BUDGETS):
+        assert h.done and len(h.generated) == n
+        assert h.generated == _reference_tokens(params, cfg, p, n), \
+            f"rid={h.rid} diverged from the sequential reference"
+    assert svc.pool.allocated == 0      # every page returned
+    svc.pool.check_invariants()
+    eps = svc.compiled_entry_points()
+    assert len(eps["decode_batch_sizes"]) > 1, \
+        "expected multiple batch-size-specialized decode entry points"
+
+
+def test_plan_cache_is_module_registry():
+    """Identical batch shapes reuse the lowered plan (cache hit); a new
+    shape (different admission batch / decode batch size) misses exactly
+    once and is then itself reused."""
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    svc = GenerateService(params, cfg, max_batch=2, max_seq=16, page_size=4)
+    prompt = np.arange(5, dtype=np.int32) % cfg.vocab
+    clear_plan_cache()
+
+    svc.submit(prompt, 4)
+    svc.submit(prompt, 4)
+    svc.run_until_complete()
+    info = plan_cache_info()
+    # one admission shape (2 requests x 2 pages) + one decode shape (bs=2)
+    assert info["misses"] == 2
+    assert info["hits"] == 2            # 2 repeat decode ticks
+
+    svc.submit(prompt, 4)
+    svc.submit(prompt, 4)
+    svc.run_until_complete()
+    info2 = plan_cache_info()
+    assert info2["misses"] == info["misses"], \
+        "same batch shapes must not re-lower"
+    assert info2["hits"] == info["hits"] + 4
+
+    svc.submit(prompt, 3)               # new shapes: 1-request admission,
+    svc.run_until_complete()            # bs=1 decode
+    info3 = plan_cache_info()
+    assert info3["misses"] == info2["misses"] + 2
+    assert info3["hits"] == info2["hits"] + 1
+
+
+def test_forged_double_assignment_refused():
+    pool = BlockPool(6, page_size=4)
+    batch = [pool.alloc(2, owner="a"), pool.alloc(2, owner="b")]
+    batch[1] = list(batch[1]) + [batch[0][0]]       # bypasses alloc
+    with pytest.raises(AdmissionConflict):
+        pool.plan_admission(batch)
+
+
+def test_unsupported_family_rejected():
+    cfg = get_config("internvl2-76b").reduced()     # vlm needs extra inputs
+    with pytest.raises(ValueError, match="families"):
+        GenerateService({}, cfg)
+
+
+def test_oversized_request_rejected():
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    svc = GenerateService(params, cfg, max_batch=1, max_seq=8, page_size=4)
+    with pytest.raises(ValueError, match="positions"):
+        svc.submit(np.zeros(4, np.int32), 32)
