@@ -1,11 +1,18 @@
 """Benchmark harness — one module per paper table/figure + the roofline.
 Prints ``name,us_per_call,derived`` CSV.  REPRO_FULL=1 for paper-size runs.
 
-    PYTHONPATH=src python -m benchmarks.run [section ...]
+    PYTHONPATH=src python -m benchmarks.run [--trace-dir DIR] [section ...]
+
+``--trace-dir DIR`` records each section under a fresh tracer and writes
+``DIR/<section>.json`` Chrome traces (open in https://ui.perfetto.dev).
+Sections that gate overhead (``sched_overhead``) measure with tracing
+*disabled*, so their trace holds only the records of the final reported
+runs, not the timed loops.
 """
 
 from __future__ import annotations
 
+import pathlib
 import sys
 import traceback
 
@@ -13,18 +20,45 @@ SECTIONS = ("sched_overhead", "engine_dispatch", "qr_scaling", "bh_scaling",
             "priority_ablation", "conflict_ablation", "pipeline_bubble",
             "serving", "kernels", "roofline")
 
+# sections whose measurement is invalid under an enabled tracer (they
+# gate the *disabled* instrumentation cost) — never traced
+UNTRACED = ("sched_overhead",)
+
 
 def main() -> None:
-    want = sys.argv[1:] or list(SECTIONS)
+    argv = sys.argv[1:]
+    trace_dir = None
+    if "--trace-dir" in argv:
+        i = argv.index("--trace-dir")
+        try:
+            trace_dir = pathlib.Path(argv[i + 1])
+        except IndexError:
+            raise SystemExit("--trace-dir needs a directory argument")
+        argv = argv[:i] + argv[i + 2:]
+        trace_dir.mkdir(parents=True, exist_ok=True)
+    want = argv or list(SECTIONS)
     failed = []
     for name in want:
         print(f"# --- {name} ---", flush=True)
+        tracing = trace_dir is not None and name not in UNTRACED
+        if tracing:
+            from repro.obs import enable as obs_enable
+            obs_enable()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main()
         except Exception:
             traceback.print_exc()
             failed.append(name)
+        finally:
+            if tracing:
+                from repro.obs import disable as obs_disable
+                from repro.obs import write_chrome_trace
+                out = trace_dir / f"{name}.json"
+                info = write_chrome_trace(out)
+                obs_disable()
+                print(f"# trace: {out} ({info['events']} events)",
+                      flush=True)
     if failed:
         raise SystemExit(f"benchmark sections failed: {failed}")
 

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import lower
 from repro.core.locks import SeqLockManager
+from repro.core import plan as plan_mod
 from repro.core.plan import clear_plan_cache
 from repro.core.weights import critical_path_weights
 from repro.apps import qr
@@ -301,8 +302,40 @@ def bench_bh(n_particles=20000):
     }
 
 
+def bench_obs_overhead(mt=32, nt=32, nr_lanes=64, repeat=9):
+    """Tracing-*disabled* observability cost on the scheduler hot path
+    (DESIGN.md §Observability, gated ≤ 3% in CI with an absolute floor
+    for timer noise): the shipped instrumented ``lower`` — null-tracer
+    spans plus registry counters — vs calling the raw ``_lower`` body
+    directly, i.e. the same work with every instrumentation site
+    bypassed.  Both run uncached on a fresh prepared graph per repeat."""
+    from repro.obs import trace as obs_trace
+
+    assert not obs_trace.get_tracer().enabled, \
+        "obs overhead must be measured with tracing disabled"
+
+    def setup():
+        s, _ = qr.make_qr_graph(mt, nt, nr_queues=nr_lanes)
+        s.prepare()
+        clear_plan_cache()
+        return s
+
+    instr, _ = _best(setup, lambda s: lower(s, nr_lanes, cache=False),
+                     repeat=repeat)
+    bare, _ = _best(setup, lambda s: plan_mod._lower(s, nr_lanes, None, ""),
+                    repeat=repeat)
+    return {
+        "graph": f"qr_{mt}x{nt}",
+        "instrumented_s": instr,
+        "bare_s": bare,
+        "ratio": instr / bare,
+        "delta_us": (instr - bare) * 1e6,
+    }
+
+
 def main() -> None:
-    out = {"qr": bench_qr(), "bh": bench_bh()}
+    out = {"qr": bench_qr(), "bh": bench_bh(),
+           "obs_overhead": bench_obs_overhead()}
     q = out["qr"]
     for phase in ("build", "prepare", "lower", "total"):
         emit(f"sched_{phase}", q["array_s"][phase] * 1e6,
@@ -316,6 +349,9 @@ def main() -> None:
     b = out["bh"]
     emit("sched_bh_total", b["array_s"]["total"] * 1e6,
          f"tasks={b['tasks']} rounds={b['rounds']}")
+    o = out["obs_overhead"]
+    emit("sched_obs_overhead", o["delta_us"],
+         f"ratio={o['ratio']:.3f} (tracing disabled, gate<=1.03)")
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sched.json"
     path.write_text(json.dumps(out, indent=2) + "\n")
     emit("sched_json", 0, str(path))

@@ -1,0 +1,89 @@
+"""Predicted-vs-measured QR task timelines in one Perfetto view.
+
+The paper's evaluation figures are per-thread task timelines (Figs 6/7)
+plus scheduler-overhead accounting.  This demo reproduces that artifact
+end to end with the observability tier (DESIGN.md §Observability):
+
+1. build the tiled-QR task graph and lower it through the plan + engine
+   table pipeline (the tracer records the build/prepare/lower/encode
+   spans along the way);
+2. measure every engine work item with ``measure_round_times
+   (per_item=True)`` — the paper's per-task tic/toc, recorded as task
+   events on the **measured** process track;
+3. replay the measured item costs through the discrete-event simulator
+   at ``--lanes`` workers and emit its timeline as the **predicted**
+   process track, aligned to the measured clock;
+4. export both tracks plus the metrics snapshot as Chrome trace-event
+   JSON — drag it into https://ui.perfetto.dev (or chrome://tracing).
+
+    PYTHONPATH=src python examples/trace_qr.py --out /tmp/trace_qr.json
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=96, help="matrix size")
+    ap.add_argument("--tile", type=int, default=32)
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="simulated workers for the predicted track")
+    ap.add_argument("--out", default="trace_qr.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+
+    from repro import engine
+    from repro.apps import qr
+    from repro.core import lower
+    from repro.core.simulator import replay_item_times, timeline_to_tracer
+    from repro.obs import enable, get_registry, write_chrome_trace
+
+    tracer = enable(process="measured")
+
+    a = jnp.asarray(np.random.default_rng(args.seed)
+                    .standard_normal((args.n, args.n)), jnp.float32)
+    tiles, mt, nt = qr._split_tiles(a, args.tile)
+    sched, _ = qr.make_qr_graph(mt, nt, nr_queues=args.lanes)
+    plan = lower(sched, args.lanes)
+    state = qr._TileState(dict(tiles), "pallas")
+    tables = engine.lower_tables(
+        plan, sched, state.batch_registry(),
+        arg_width=engine.QR_ARG_WIDTH, row_access=engine.qr_row_access)
+    stack = jnp.stack([tiles[i, j] for j in range(nt) for i in range(mt)])
+
+    # measured: one task record per engine work item (paper tic/toc)
+    timings = engine.measure_round_times(
+        tables, engine.qr_round_fn(), (), (stack, jnp.zeros_like(stack)),
+        per_item=True)
+
+    # predicted: replay the measured per-item costs through the
+    # discrete-event model at --lanes workers, on the measured clock
+    result = replay_item_times(sched, tables.tids, timings.item_s,
+                               nr_workers=args.lanes)
+    t_origin = min(t.t0 for t in tracer.tasks)
+    n_pred = timeline_to_tracer(result, process="predicted",
+                                t_origin=t_origin)
+
+    names = {qr.T_GEQRF: "GEQRF", qr.T_LARFT: "LARFT",
+             qr.T_TSQRF: "TSQRF", qr.T_SSRFT: "SSRFT"}
+    info = write_chrome_trace(args.out, registry=get_registry(),
+                              type_names=names)
+    measured_s = float(timings.item_s.sum())
+    print(f"qr {args.n}x{args.n} tile {args.tile}: {sched.nr_tasks} tasks, "
+          f"{tables.nr_items} items")
+    print(f"measured serial {measured_s * 1e3:.1f}ms; predicted "
+          f"{args.lanes}-lane makespan {result.makespan * 1e3:.1f}ms "
+          f"(speedup {measured_s / result.makespan:.2f}x, "
+          f"{n_pred} predicted events)")
+    print(f"trace: {args.out} ({info['events']} events, processes="
+          f"{info['processes']}) — open in https://ui.perfetto.dev")
+
+
+if __name__ == "__main__":
+    main()

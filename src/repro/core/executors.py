@@ -10,13 +10,26 @@
 
 Both accept ``pass_tid=True`` to call ``fun(type, data, tid)`` for task
 bodies that key side tables by task id (Barnes-Hut's per-task work lists).
+
+Observability (DESIGN.md §Observability): when the global tracer is
+enabled, both executors record one per-task tic/toc record
+``(tid, type, worker, t0, t1)`` — the paper's per-thread task timelines
+(Figs 6/7/11/12).  Independently of tracing, each run tallies exact
+per-type execution counts (``type_counts``) and, for the threaded
+executor, the failed ``lockres`` attempts of the run (``lock_failures``,
+the paper's Fig 13 overhead accounting) — both also bulk-incremented
+onto the global metrics registry (``executor.tasks.type*``,
+``executor.tasks_executed``, ``executor.lock_failures``).
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, List, Mapping
+from typing import Any, Callable, Dict, List, Mapping
+
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 from .graph import FLAG_VIRTUAL, QSched
 
@@ -34,18 +47,38 @@ def registry_fun(registry: Mapping[int, Any]) -> Callable[[int, Any, int], None]
     return fun
 
 
+def _publish_counts(prefix: str, type_counts: Dict[int, int],
+                    lock_failures: int = 0) -> None:
+    """Bulk-increment one run's exact tallies onto the global registry
+    (one ``inc`` per type, never per task — zero hot-path cost)."""
+    reg = _metrics.get_registry()
+    total = 0
+    for ttype, n in type_counts.items():
+        reg.counter(f"{prefix}.tasks.type{ttype}").inc(n)
+        total += n
+    reg.counter(f"{prefix}.tasks_executed").inc(total)
+    if lock_failures:
+        reg.counter(f"{prefix}.lock_failures").inc(lock_failures)
+
+
 class ThreadedExecutor:
     def __init__(self, sched: QSched, nr_threads: int):
         self.sched = sched
         self.nr_threads = nr_threads
         self.errors: List[BaseException] = []
         self._abort = threading.Event()
+        # per-run accounting, reset by run() like the error state
+        self.lock_failures = 0
+        self.type_counts: Dict[int, int] = {}
+        self._worker_counts: List[Dict[int, int]] = []
 
     def _worker(self, wid: int, fun: Callable[..., None],
                 pass_tid: bool) -> None:
         s = self.sched
         qid = wid % s.nr_queues
         ttype, tdata, tflags = s._ttype, s._tdata, s._tflags
+        tr = _trace.get_tracer()
+        counts = self._worker_counts[wid]
         try:
             while not self._abort.is_set():
                 tid = s.gettask(qid, block=False)
@@ -55,10 +88,16 @@ class ThreadedExecutor:
                     time.sleep(1e-5)  # qsched_flag_yield analogue
                     continue
                 if not tflags[tid] & FLAG_VIRTUAL:
+                    tt = ttype[tid]
+                    if tr.enabled:
+                        t0 = time.perf_counter()
                     if pass_tid:
-                        fun(ttype[tid], tdata[tid], tid)
+                        fun(tt, tdata[tid], tid)
                     else:
-                        fun(ttype[tid], tdata[tid])
+                        fun(tt, tdata[tid])
+                    if tr.enabled:
+                        tr.task(tid, tt, wid, t0, time.perf_counter())
+                    counts[tt] = counts.get(tt, 0) + 1
                 s.done(tid)
         except BaseException as e:  # surface worker errors to the caller
             self.errors.append(e)
@@ -70,6 +109,9 @@ class ThreadedExecutor:
     def run(self, fun: Callable[..., None], pass_tid: bool = False) -> None:
         self.errors.clear()
         self._abort.clear()
+        self.lock_failures = 0
+        self.type_counts = {}
+        self._worker_counts = [{} for _ in range(self.nr_threads)]
         self.sched.start(threaded=True)
         threads = [
             threading.Thread(target=self._worker, args=(w, fun, pass_tid),
@@ -80,6 +122,13 @@ class ThreadedExecutor:
             th.start()
         for th in threads:
             th.join()
+        # workers have quiesced: merge their private tallies (exact, no
+        # cross-thread increments anywhere on the hot path)
+        for counts in self._worker_counts:
+            for tt, n in counts.items():
+                self.type_counts[tt] = self.type_counts.get(tt, 0) + n
+        self.lock_failures = self.sched.lock_failures
+        _publish_counts("executor", self.type_counts, self.lock_failures)
         if self.errors:
             raise self.errors[0]
         if self.sched.waiting > 0:
@@ -97,16 +146,23 @@ class SequentialExecutor:
     """Drain the scheduler with one worker.  Because tasks run in the
     scheduler's priority order and ``fun`` may operate on traced JAX values,
     wrapping ``run`` in ``jax.jit`` turns the whole task graph into a single
-    XLA program whose op order follows the QuickSched schedule."""
+    XLA program whose op order follows the QuickSched schedule.
+
+    Per-task tic/toc records measure *host dispatch* time here — under
+    ``jax.jit`` the bodies trace rather than execute, so the records show
+    scheduling order, not device time."""
 
     def __init__(self, sched: QSched):
         self.sched = sched
+        self.type_counts: Dict[int, int] = {}
 
     def run(self, fun: Callable[..., None],
             pass_tid: bool = False) -> List[int]:
         s = self.sched
         s.start(threaded=False)
         ttype, tdata, tflags = s._ttype, s._tdata, s._tflags
+        tr = _trace.get_tracer()
+        counts: Dict[int, int] = {}
         order: List[int] = []
         while True:
             tid = s.gettask(0, block=False)
@@ -116,12 +172,20 @@ class SequentialExecutor:
                 raise RuntimeError(
                     f"no runnable task with {s.waiting} waiting (deadlock)")
             if not tflags[tid] & FLAG_VIRTUAL:
+                tt = ttype[tid]
+                if tr.enabled:
+                    t0 = time.perf_counter()
                 if pass_tid:
-                    fun(ttype[tid], tdata[tid], tid)
+                    fun(tt, tdata[tid], tid)
                 else:
-                    fun(ttype[tid], tdata[tid])
+                    fun(tt, tdata[tid])
+                if tr.enabled:
+                    tr.task(tid, tt, 0, t0, time.perf_counter())
+                counts[tt] = counts.get(tt, 0) + 1
             order.append(tid)
             s.done(tid)
+        self.type_counts = counts
+        _publish_counts("executor", counts)
         return order
 
     def run_registry(self, registry: Mapping[int, Any]) -> List[int]:

@@ -24,6 +24,8 @@ from typing import Any, Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import trace as _trace
+
 from .arrays import CompiledGraph
 from .locks import BaseLockManager, make_lock_manager
 from .queue import TaskQueue
@@ -248,9 +250,12 @@ class QSched:
         self.waiting = 0
         self._waiting_mutex = threading.Lock()
         self.topo_order: List[int] = []
-        # bookkeeping for benchmarks
+        # bookkeeping for benchmarks / the paper's overhead accounting
+        # (Fig 13): lock_failures counts failed all-or-nothing lockres
+        # attempts in gettask (previously silently retried)
         self.steals = 0
         self.gettask_calls = 0
+        self.lock_failures = 0
 
     # -- graph construction (paper appendix A API) --------------------------
     def addtask(self, type: int = 0, data: Any = None, cost: float = 1.0,
@@ -421,12 +426,14 @@ class QSched:
         weights do not invalidate it)."""
         sig = self._sig()
         if self.graph is None or self.graph.version != sig:
-            dep_src, dep_dst = self._deps.arrays()
-            lock_t, lock_r = self._locks.arrays()
-            use_t, use_r = self._uses.arrays()
-            self.graph = CompiledGraph(
-                sig, len(self._ttype), len(self._res_parent),
-                dep_src, dep_dst, lock_t, lock_r, use_t, use_r)
+            with _trace.span("core.compile", tasks=len(self._ttype),
+                             deps=len(self._deps)):
+                dep_src, dep_dst = self._deps.arrays()
+                lock_t, lock_r = self._locks.arrays()
+                use_t, use_r = self._uses.arrays()
+                self.graph = CompiledGraph(
+                    sig, len(self._ttype), len(self._res_parent),
+                    dep_src, dep_dst, lock_t, lock_r, use_t, use_r)
             self._adj_cache = None
         return self.graph
 
@@ -487,13 +494,15 @@ class QSched:
         """Compile the graph structure to CSR (once per version), then run
         the vectorized Kahn toposort + critical-path sweep; lock lists come
         out sorted by resource id (deadlock avoidance, paper §3.3)."""
-        g = self._compiled()
-        cost = np.asarray(self._tcost, dtype=np.float64)
-        self._weight = g.weights(cost)
-        self._wait = g.wait0.tolist()
-        self.topo_order = g.order.tolist()
-        self._prepared = True
-        self._shash = None
+        with _trace.span("core.prepare", tasks=self.nr_tasks,
+                         deps=self.nr_deps):
+            g = self._compiled()
+            cost = np.asarray(self._tcost, dtype=np.float64)
+            self._weight = g.weights(cost)
+            self._wait = g.wait0.tolist()
+            self.topo_order = g.order.tolist()
+            self._prepared = True
+            self._shash = None
 
     # -- execution protocol (paper §3.4) ---------------------------------------
     def start(self, threaded: bool = False) -> None:
@@ -507,6 +516,7 @@ class QSched:
         self.waiting = self.nr_tasks
         self.steals = 0
         self.gettask_calls = 0
+        self.lock_failures = 0
         self._wait = g.wait0.tolist()
         for tid in np.flatnonzero(g.wait0 == 0).tolist():
             self.enqueue(tid)
@@ -533,7 +543,16 @@ class QSched:
         self.queues[best].put(tid)
 
     def _try_lock_task(self, tid: int) -> bool:
-        return self.lockmgr.lock_all(self.graph.locks_list[tid])
+        ok = self.lockmgr.lock_all(self.graph.locks_list[tid])
+        if not ok:
+            # the paper's overhead accounting: a failed all-or-nothing
+            # lockres attempt that gettask silently retries.  Exact under
+            # threading (mutex-guarded); the failure path is off the
+            # contention-free fast path so the cost is paid only when a
+            # conflict actually occurred.
+            with self._waiting_mutex:
+                self.lock_failures += 1
+        return ok
 
     def gettask(self, qid: int, block: bool = False) -> Optional[int]:
         """qsched_gettask: preferred queue first, then work-steal from the

@@ -37,20 +37,25 @@ from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
 
 import numpy as np
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
 from .arrays import csr_gather
 from .graph import FLAG_VIRTUAL, QSched
 
 _PLAN_CACHE: "Dict[Tuple[str, int, Optional[int]], ExecutionPlan]" = {}
 _PLAN_CACHE_MAX = 64
-_PLAN_CACHE_HITS = 0
-_PLAN_CACHE_MISSES = 0
+# exact-count cache accounting lives on the metrics registry
+# (DESIGN.md §Observability); plan_cache_info() keeps the dict shape the
+# serving tests assert against
+_CACHE_HITS = _metrics.get_registry().counter("plan.cache.hits")
+_CACHE_MISSES = _metrics.get_registry().counter("plan.cache.misses")
 
 
 def clear_plan_cache() -> None:
-    global _PLAN_CACHE_HITS, _PLAN_CACHE_MISSES
     _PLAN_CACHE.clear()
-    _PLAN_CACHE_HITS = 0
-    _PLAN_CACHE_MISSES = 0
+    _CACHE_HITS.reset()
+    _CACHE_MISSES.reset()
 
 
 def plan_cache_info() -> Dict[str, int]:
@@ -60,7 +65,7 @@ def plan_cache_info() -> Dict[str, int]:
     an already-seen batch shape must be cache hits (``tests/test_serve.py``
     plan-cache regression)."""
     return {"entries": len(_PLAN_CACHE), "max": _PLAN_CACHE_MAX,
-            "hits": _PLAN_CACHE_HITS, "misses": _PLAN_CACHE_MISSES}
+            "hits": _CACHE_HITS.value, "misses": _CACHE_MISSES.value}
 
 
 @dataclass(frozen=True)
@@ -198,17 +203,18 @@ def color_phases(accesses: Sequence[Tuple[Sequence, Sequence]]) -> List[int]:
     bounds: List[int] = [0]
     if not accesses:
         return bounds
-    cur_reads: set = set()
-    cur_writes: set = set()
-    for i, (reads, writes) in enumerate(accesses):
-        r, w = set(reads), set(writes)
-        conflict = bool((cur_writes & (r | w)) or (w & cur_reads))
-        if conflict and i > bounds[-1]:
-            bounds.append(i)
-            cur_reads, cur_writes = set(), set()
-        cur_reads |= r
-        cur_writes |= w
-    bounds.append(len(accesses))
+    with _trace.span("plan.color_phases", items=len(accesses)):
+        cur_reads: set = set()
+        cur_writes: set = set()
+        for i, (reads, writes) in enumerate(accesses):
+            r, w = set(reads), set(writes)
+            conflict = bool((cur_writes & (r | w)) or (w & cur_reads))
+            if conflict and i > bounds[-1]:
+                bounds.append(i)
+                cur_reads, cur_writes = set(), set()
+            cur_reads |= r
+            cur_writes |= w
+        bounds.append(len(accesses))
     return bounds
 
 
@@ -220,7 +226,6 @@ def lower(sched: QSched, nr_lanes: int,
     existing plan without re-lowering."""
     if not sched._is_prepared():
         sched.prepare()
-    global _PLAN_CACHE_HITS, _PLAN_CACHE_MISSES
     shash = sched.structural_hash() if cache else ""
     if cache:
         key = (shash, nr_lanes, max_tasks_per_round)
@@ -228,10 +233,13 @@ def lower(sched: QSched, nr_lanes: int,
         if hit is not None:
             _PLAN_CACHE.pop(key)       # LRU: refresh on hit
             _PLAN_CACHE[key] = hit
-            _PLAN_CACHE_HITS += 1
+            _CACHE_HITS.inc()
             return hit
-        _PLAN_CACHE_MISSES += 1
-    plan = _lower(sched, nr_lanes, max_tasks_per_round, shash)
+        _CACHE_MISSES.inc()
+    with _trace.span("plan.lower", tasks=sched.nr_tasks,
+                     nr_lanes=nr_lanes) as sp:
+        plan = _lower(sched, nr_lanes, max_tasks_per_round, shash)
+        sp.args["rounds"] = plan.nr_rounds
     if cache:
         if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
             _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))

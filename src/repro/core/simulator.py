@@ -20,6 +20,8 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.obs import trace as _trace
+
 from .graph import FLAG_VIRTUAL, QSched
 
 
@@ -61,6 +63,13 @@ def simulate(sched: QSched, nr_workers: int, overhead: float = 0.0,
     """Simulate ``sched`` on ``nr_workers`` workers.  ``sched.nr_queues``
     should equal ``nr_workers`` for the paper's one-queue-per-core setup
     (but any combination is allowed)."""
+    with _trace.span("sim.simulate", tasks=sched.nr_tasks,
+                     workers=nr_workers):
+        return _simulate(sched, nr_workers, overhead, speed)
+
+
+def _simulate(sched: QSched, nr_workers: int, overhead: float,
+              speed: float) -> SimResult:
     sched.start(threaded=False)
     timeline: List[TimelineEvent] = []
     busy = [0.0] * nr_workers
@@ -115,6 +124,31 @@ def simulate(sched: QSched, nr_workers: int, overhead: float = 0.0,
         steals=sched.steals,
         gettask_calls=sched.gettask_calls,
     )
+
+
+def timeline_to_tracer(result: SimResult, tracer=None, *,
+                       process: str = "predicted", scale: float = 1.0,
+                       t_origin: float = 0.0) -> int:
+    """Emit a simulated timeline as trace task records — the *same* schema
+    measured executions use, so a predicted timeline and a measured one
+    render as two process tracks in a single Perfetto view (the paper's
+    Fig 8/13 predicted-vs-measured methodology; ROADMAP simulator
+    validation).
+
+    Virtual time maps to trace seconds as ``t_origin + t * scale``: when
+    the simulation replayed *measured* costs (``replay_item_times`` /
+    ``replay_round_times``), ``scale=1.0`` keeps the two tracks on one
+    clock and ``t_origin`` aligns the predicted start with the measured
+    one.  Records land on the global tracer unless one is passed; returns
+    the number of records emitted (0 on a disabled tracer)."""
+    tr = _trace.get_tracer() if tracer is None else tracer
+    if not tr.enabled:
+        return 0
+    for e in result.timeline:
+        tr.task(e.tid, e.type, e.worker,
+                t_origin + e.t0 * scale, t_origin + e.t1 * scale,
+                process=process)
+    return len(result.timeline)
 
 
 def replay_round_times(sched: QSched, plan, round_times,

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.graph import FLAG_VIRTUAL, QSched
 from repro.core.plan import BatchSpec, ExecutionPlan, color_phases
+from repro.obs import trace as _trace
 
 # row -> (reads, writes): hashable state-row keys a descriptor row loads
 # from / stores to, in a family-defined keyspace.  Drives the write
@@ -128,42 +129,51 @@ def lower_tables(plan: ExecutionPlan, sched: QSched,
     round_offsets = np.zeros(plan.nr_rounds + 1, dtype=np.int64)
     phase_offsets: List[int] = [0]
     round_phase_ptr = np.zeros(plan.nr_rounds + 1, dtype=np.int64)
-    for r, rnd in enumerate(plan.rounds):
-        rows: List[Tuple[int, ...]] = []
-        rtids: List[int] = []
-        for tb in rnd.batches:
-            real = [t for t in tb.tids if not flags[t] & FLAG_VIRTUAL]
-            if not real:
-                continue
-            spec = registry.get(tb.ttype)
-            if spec is None:
-                raise KeyError(
-                    f"no BatchSpec registered for task type {tb.ttype}")
-            if spec.encode is None:
-                raise KeyError(
-                    f"BatchSpec for task type {tb.ttype} has no engine "
-                    f"encoder (BatchSpec.encode)")
-            for tid in real:
-                for row in spec.encode(tid, datas[tid]):
-                    row = tuple(int(v) for v in row)
-                    if len(row) > 1 + arg_width:
-                        raise ValueError(
-                            f"encoder for type {tb.ttype} emitted {len(row)}"
-                            f" columns, table holds {1 + arg_width}")
-                    rows.append(row)
-                    rtids.append(tid)
-        base = len(all_rows)
-        if rows:
-            if row_access is None:
-                bounds = [0, len(rows)]
-            else:
-                bounds = color_phases([row_access(row) for row in rows])
-            phase_offsets.extend(base + b for b in bounds[1:])
-        # empty rounds contribute zero phases and a zero-length CSR slice
-        all_rows.extend(rows)
-        all_tids.extend(rtids)
-        round_offsets[r + 1] = len(all_rows)
-        round_phase_ptr[r + 1] = len(phase_offsets) - 1
+    tables_span = _trace.span("engine.lower_tables", tasks=plan.nr_tasks,
+                              rounds=plan.nr_rounds)
+    with tables_span:
+        for r, rnd in enumerate(plan.rounds):
+            rows: List[Tuple[int, ...]] = []
+            rtids: List[int] = []
+            with _trace.span("engine.encode", round=r):
+                for tb in rnd.batches:
+                    real = [t for t in tb.tids
+                            if not flags[t] & FLAG_VIRTUAL]
+                    if not real:
+                        continue
+                    spec = registry.get(tb.ttype)
+                    if spec is None:
+                        raise KeyError(
+                            f"no BatchSpec registered for task type "
+                            f"{tb.ttype}")
+                    if spec.encode is None:
+                        raise KeyError(
+                            f"BatchSpec for task type {tb.ttype} has no "
+                            f"engine encoder (BatchSpec.encode)")
+                    for tid in real:
+                        for row in spec.encode(tid, datas[tid]):
+                            row = tuple(int(v) for v in row)
+                            if len(row) > 1 + arg_width:
+                                raise ValueError(
+                                    f"encoder for type {tb.ttype} emitted "
+                                    f"{len(row)} columns, table holds "
+                                    f"{1 + arg_width}")
+                            rows.append(row)
+                            rtids.append(tid)
+            base = len(all_rows)
+            if rows:
+                if row_access is None:
+                    bounds = [0, len(rows)]
+                else:
+                    bounds = color_phases([row_access(row) for row in rows])
+                phase_offsets.extend(base + b for b in bounds[1:])
+            # empty rounds contribute zero phases + a zero-length CSR slice
+            all_rows.extend(rows)
+            all_tids.extend(rtids)
+            round_offsets[r + 1] = len(all_rows)
+            round_phase_ptr[r + 1] = len(phase_offsets) - 1
+        tables_span.args["items"] = len(all_rows)
+        tables_span.args["phases"] = len(phase_offsets) - 1
 
     nr_items = len(all_rows)
     desc = np.zeros((nr_items, 1 + arg_width), dtype=np.int32)

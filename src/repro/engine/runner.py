@@ -35,6 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
 from .descriptors import TaskTable
 
 # (desc, phase_bounds, statics, buffers) -> buffers; phase_bounds is a
@@ -102,7 +105,24 @@ def execute_plan(tables: TaskTable, round_fn: RoundFn,
     segments = (_fused_segments(tables) if fuse_rounds
                 else _round_segments(tables))
     run = _segment_runner(round_fn, segments, bool(donate))
-    return run(jnp.asarray(tables.desc), statics, buffers)
+    reg = _metrics.get_registry()
+    reg.counter("engine.plans_executed").inc()
+    reg.counter("engine.launch_segments").inc(len(segments))
+    reg.counter("engine.items_walked").inc(tables.nr_items)
+    tr = _trace.get_tracer()
+    if not tr.enabled:
+        return run(jnp.asarray(tables.desc), statics, buffers)
+    # launch-segment span: tracing forces a device sync so the span covers
+    # execution, not just the async dispatch — acceptable observer cost,
+    # paid only when a tracer is installed
+    t0 = _trace.now()
+    out = run(jnp.asarray(tables.desc), statics, buffers)
+    jax.block_until_ready(out)
+    tr.event_span("engine.execute", t0, _trace.now(), lane="engine",
+                  items=tables.nr_items, rounds=tables.nr_rounds,
+                  phases=tables.nr_phases, segments=len(segments),
+                  fused=fuse_rounds)
+    return out
 
 
 @functools.lru_cache(maxsize=None)
@@ -167,6 +187,7 @@ def measure_round_times(tables: TaskTable, round_fn: RoundFn,
             bufs = runners[r](desc, statics, bufs)
     jax.block_until_ready(bufs)
 
+    tr = _trace.get_tracer()
     round_s: List[float] = []
     bufs = init
     for r in range(tables.nr_rounds):
@@ -176,7 +197,13 @@ def measure_round_times(tables: TaskTable, round_fn: RoundFn,
         t0 = time.perf_counter()
         bufs = runners[r](desc, statics, bufs)
         jax.block_until_ready(bufs)
-        round_s.append(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        round_s.append(t1 - t0)
+        if tr.enabled:
+            tr.event_span("engine.round", t0, t1, lane="engine rounds",
+                          round=r,
+                          items=int(tables.round_offsets[r + 1]
+                                    - tables.round_offsets[r]))
 
     item_s = None
     if per_item:
@@ -186,9 +213,16 @@ def measure_round_times(tables: TaskTable, round_fn: RoundFn,
                 run1(desc[0:1], statics, init))          # compile warmup
         bufs = init
         item_s = np.zeros(tables.nr_items, np.float64)
+        etypes = tables.desc[:, 0]
         for q in range(tables.nr_items):
             t0 = time.perf_counter()
             bufs = run1(desc[q:q + 1], statics, bufs)
             jax.block_until_ready(bufs)
-            item_s[q] = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            item_s[q] = t1 - t0
+            if tr.enabled:
+                # the paper's per-task tic/toc, keyed back to tasks
+                # through TaskTable.tids — one timeline row, since the
+                # measurement pass is by construction sequential
+                tr.task(int(tables.tids[q]), int(etypes[q]), 0, t0, t1)
     return RoundTimings(round_s=round_s, item_s=item_s, buffers=bufs)

@@ -28,11 +28,14 @@ def _continuous_main(args) -> None:
 
     from repro.configs import get_config
     from repro.models import lm
+    from repro.obs import enable as obs_enable, write_chrome_trace
     from repro.serve import GenerateService
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.trace:
+        obs_enable()
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
     page = 8
     max_seq = -(-(args.prompt_len + args.new_tokens - 1) // page) * page
@@ -53,6 +56,11 @@ def _continuous_main(args) -> None:
     print(f"continuous: {n_req} requests, {done} tokens in "
           f"{svc.stats['steps']} steps, {dt:.2f}s ({done / dt:.1f} tok/s)")
     print(f"entry points: {svc.compiled_entry_points()}")
+    if args.trace:
+        info = write_chrome_trace(args.trace, registry=svc.metrics)
+        print(f"trace: {args.trace} ({info['events']} events, "
+              f"{len(info['counter_tracks'])} counter tracks) — open in "
+              f"https://ui.perfetto.dev")
     print("greedy continuations (token ids):")
     for h in handles[:4]:
         print(f"  rid={h.rid} n={len(h.generated)}:", h.generated[:16])
@@ -68,6 +76,10 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--continuous", action="store_true",
                     help="run the repro.serve continuous-batching service")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome/Perfetto trace of the run "
+                         "(continuous mode: request lifecycles, engine "
+                         "launches, pool/queue counter tracks)")
     args = ap.parse_args()
     if args.continuous:
         _continuous_main(args)
@@ -78,11 +90,14 @@ def main() -> None:
 
     from repro.configs import get_config
     from repro.models import lm, serving
+    from repro.obs import enable as obs_enable, get_tracer, write_chrome_trace
     from repro.trainer.steps import make_serve_step
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.trace:
+        obs_enable()
     max_seq = args.prompt_len + args.new_tokens
     key = jax.random.PRNGKey(args.seed)
     params = lm.init_params(key, cfg)
@@ -96,8 +111,11 @@ def main() -> None:
         extra["frames"] = jnp.zeros((args.batch, cfg.enc_seq, cfg.d_model),
                                     jnp.dtype(cfg.dtype))
 
+    tr = get_tracer()
     t0 = time.time()
-    logits, cache, pos = serving.prefill(params, cfg, tokens, extra=extra)
+    with tr.span("serve.prefill", batch=args.batch, plen=args.prompt_len):
+        logits, cache, pos = serving.prefill(params, cfg, tokens, extra=extra)
+        jax.block_until_ready(logits)
     # pad the prompt-length cache out to max_seq (attention caches only)
     plen = args.prompt_len + (cfg.n_vis_tokens if cfg.family == "vlm" else 0)
 
@@ -115,15 +133,23 @@ def main() -> None:
     tok = jnp.argmax(logits, -1)[:, None]
     out = [tok]
     t0 = time.time()
-    for _ in range(args.new_tokens):
-        logits, cache = serve_step(params, cache, tok, pos)
-        tok = jnp.argmax(logits, -1)[:, None]
-        pos = pos + 1
-        out.append(tok)
-    jax.block_until_ready(logits)
+    with tr.span("serve.decode", batch=args.batch, tokens=args.new_tokens):
+        for i in range(args.new_tokens):
+            with tr.span("serve.decode_step", step=i):
+                logits, cache = serve_step(params, cache, tok, pos)
+                if tr.enabled:
+                    jax.block_until_ready(logits)
+            tok = jnp.argmax(logits, -1)[:, None]
+            pos = pos + 1
+            out.append(tok)
+        jax.block_until_ready(logits)
     dt = time.time() - t0
     print(f"decode {args.new_tokens} tokens × batch {args.batch}: "
           f"{dt:.2f}s ({args.new_tokens * args.batch / dt:.1f} tok/s)")
+    if args.trace:
+        info = write_chrome_trace(args.trace)
+        print(f"trace: {args.trace} ({info['events']} events) — open in "
+              f"https://ui.perfetto.dev")
     ids = jnp.concatenate(out, axis=1)
     print("greedy continuations (token ids):")
     for row in ids[:4]:

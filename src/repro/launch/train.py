@@ -28,11 +28,17 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome/Perfetto trace of the run "
+                         "(per-step train.step spans)")
     args = ap.parse_args()
 
     from repro.configs import get_config
     from repro.trainer.loop import run_training
 
+    if args.trace:
+        from repro.obs import enable as obs_enable
+        obs_enable()
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -44,6 +50,11 @@ def main() -> None:
     first = history[0][1] if history else float("nan")
     last = history[-1][1] if history else float("nan")
     print(f"done: {len(history)} steps, loss {first:.4f} -> {last:.4f}")
+    if args.trace:
+        from repro.obs import write_chrome_trace
+        info = write_chrome_trace(args.trace)
+        print(f"trace: {args.trace} ({info['events']} events) — open in "
+              f"https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

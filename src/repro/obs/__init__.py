@@ -1,0 +1,33 @@
+"""repro.obs — task-level tracing, metrics, Perfetto export.
+
+The observability tier under every other layer (DESIGN.md
+§Observability): ``trace`` collects the paper's per-task tic/toc records
+plus nested phase spans and counter samples, ``metrics`` keeps
+exact-integer counters/gauges/histograms, and ``export`` renders both as
+Chrome trace-event JSON for Perfetto / ``chrome://tracing``.  Depends on
+nothing else in the repo, so ``core`` may import it freely.
+"""
+
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      get_registry)
+from .trace import (NullTracer, Tracer, disable, enable, get_tracer,
+                    set_tracer, span)
+
+_EXPORT_NAMES = ("to_chrome_trace", "validate_chrome_trace",
+                 "write_chrome_trace")
+
+
+def __getattr__(name):
+    # lazy so `python -m repro.obs.export` doesn't import the submodule
+    # twice (runpy warns when a package __init__ pre-imports its target)
+    if name in _EXPORT_NAMES:
+        from . import export
+        return getattr(export, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "get_registry",
+    "NullTracer", "Tracer", "disable", "enable", "get_tracer",
+    "set_tracer", "span",
+    "to_chrome_trace", "validate_chrome_trace", "write_chrome_trace",
+]

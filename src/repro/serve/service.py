@@ -54,6 +54,8 @@ from repro.core.backends import EngineHooks, run_plan
 from repro.core.graph import QSched
 from repro.core.plan import BatchSpec, lower
 from repro.models import serving as serving_mod
+from repro.obs import trace as _trace
+from repro.obs.metrics import MetricsRegistry
 
 from .blockpool import TT_PREFILL, BlockPool
 
@@ -65,7 +67,10 @@ SUPPORTED_FAMILIES = ("dense", "moe", "ssm")
 
 @dataclass
 class Request:
-    """One generation request moving through the service."""
+    """One generation request moving through the service.  The ``t_*``
+    timestamps (submit → admit → first token → complete, on the tracer's
+    clock) are always recorded — they feed the TTFT/latency histograms
+    and, when a tracer is enabled, the per-request lifecycle spans."""
     rid: int
     prompt: np.ndarray                 # (plen,) int32
     max_new_tokens: int
@@ -74,10 +79,24 @@ class Request:
     slot: int = -1
     pos: int = 0
     done: bool = False
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
 
     @property
     def tokens(self) -> List[int]:
         return list(self.generated)
+
+    @property
+    def ttft_s(self) -> float:
+        """Submit → first token (0.0 until the first token exists)."""
+        return self.t_first - self.t_submit if self.t_first else 0.0
+
+    @property
+    def latency_s(self) -> float:
+        """Submit → retire (0.0 until the request completes)."""
+        return self.t_done - self.t_submit if self.t_done else 0.0
 
 
 def _decode_row_access(row: Sequence[int]) -> Tuple[Tuple, Tuple]:
@@ -201,10 +220,27 @@ class GenerateService:
             fuse_rounds=False,
             donate=False,
         )
-        self.stats: Dict[str, int] = {
-            "submitted": 0, "admitted": 0, "retired": 0,
-            "steps": 0, "decode_items": 0, "generated_tokens": 0,
-        }
+        # per-service metrics registry (DESIGN.md §Observability): exact
+        # lifecycle counters (the old ad-hoc stats dict, now typed),
+        # occupancy/depth gauges sampled every tick, TTFT + end-to-end
+        # latency histograms.  `stats` stays dict-shaped for callers.
+        self.metrics = MetricsRegistry()
+        self._counters = {k: self.metrics.counter(f"serve.{k}")
+                          for k in ("submitted", "admitted", "retired",
+                                    "steps", "decode_items",
+                                    "generated_tokens")}
+        self._g_pages = self.metrics.gauge("serve.pages_in_use")
+        self._g_queue = self.metrics.gauge("serve.queue_depth")
+        self._g_active = self.metrics.gauge("serve.active_slots")
+        self._h_ttft = self.metrics.histogram("serve.ttft_s")
+        self._h_latency = self.metrics.histogram("serve.latency_s")
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Exact lifecycle counts as a plain dict — backward-compatible
+        view over the metrics registry (``tests/test_serve.py`` asserts
+        these counts; ``GenerateService.metrics`` is the full registry)."""
+        return {k: c.value for k, c in self._counters.items()}
 
     # -- public API ----------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
@@ -219,9 +255,11 @@ class GenerateService:
                 f"request needs {positions} cache positions, service "
                 f"max_seq is {self.max_seq}")
         req = Request(self._next_rid, prompt, max_new_tokens)
+        req.t_submit = _trace.now()
         self._next_rid += 1
         self._queue.append(req)
-        self.stats["submitted"] += 1
+        self._counters["submitted"].inc()
+        self._g_queue.set(len(self._queue))
         return req
 
     def step(self) -> bool:
@@ -236,19 +274,20 @@ class GenerateService:
             run_plan(sched, self.registry, "engine", plan=plan,
                      engine=self.hooks)
             self.decode_batch_sizes_seen.add(len(slots))
-            self.stats["decode_items"] += len(slots)
+            self._counters["decode_items"].inc(len(slots))
             tok_h = np.asarray(self._tok)      # one sync per tick
             pos_h = np.asarray(self._pos)
             for slot in slots:
                 req = self._active[slot]
                 req.generated.append(int(tok_h[slot]))
                 req.pos = int(pos_h[slot])
-                self.stats["generated_tokens"] += 1
+                self._counters["generated_tokens"].inc()
             for slot in slots:
                 req = self._active[slot]
                 if len(req.generated) >= req.max_new_tokens:
                     self._retire(req)
-        self.stats["steps"] += 1
+        self._counters["steps"].inc()
+        self._sample_gauges()
         return bool(self._active or self._queue)
 
     def run_until_complete(self, max_steps: int = 100_000) -> None:
@@ -273,6 +312,7 @@ class GenerateService:
             if not self.pool.can_admit(need):
                 break
             self._queue.popleft()
+            req.t_admit = _trace.now()
             req.slot = self._free_slots.pop()
             req.pages = self.pool.alloc(need, owner=req.rid)
             batch.append(req)
@@ -286,7 +326,7 @@ class GenerateService:
             [r.pages for r in batch], TT_PREFILL, datas=batch,
             nr_lanes=self.nr_lanes)
         run_plan(sched, self.registry, "rounds", plan=plan)
-        self.stats["admitted"] += len(batch)
+        self._counters["admitted"].inc(len(batch))
         for req in batch:
             if len(req.generated) >= req.max_new_tokens:
                 self._retire(req)      # prompt-only requests never decode
@@ -308,8 +348,9 @@ class GenerateService:
             jnp.asarray(pt_row), req.slot, self._pt, self._tok, self._pos)
         req.generated.append(int(tok0))
         req.pos = plen
+        req.t_first = _trace.now()     # prefill yields the first token
         self._active[req.slot] = req
-        self.stats["generated_tokens"] += 1
+        self._counters["generated_tokens"].inc()
 
     def _make_prefill_fn(self, plen: int) -> Callable:
         cfg = self.cfg
@@ -370,10 +411,48 @@ class GenerateService:
     def _writeback(self, buffers: Tuple) -> None:
         self.pool.leaves, self._pt, self._tok, self._pos = buffers
 
+    def _sample_gauges(self) -> None:
+        """Sample occupancy/depth gauges and, when a tracer is enabled,
+        emit them as counter-track samples — the page-pool occupancy and
+        queue-depth time series in the Perfetto view."""
+        in_use = self.pool.allocated
+        self._g_pages.set(in_use)
+        self._g_queue.set(len(self._queue))
+        self._g_active.set(len(self._active))
+        tr = _trace.get_tracer()
+        if tr.enabled:
+            t = _trace.now()
+            tr.counter("serve.pages_in_use", in_use, t=t)
+            tr.counter("serve.queue_depth", len(self._queue), t=t)
+            tr.counter("serve.active_slots", len(self._active), t=t)
+
     def _retire(self, req: Request) -> None:
         self.pool.free(req.pages)
         self._active.pop(req.slot, None)
         self._free_slots.append(req.slot)
         req.slot = -1
         req.done = True
-        self.stats["retired"] += 1
+        req.t_done = _trace.now()
+        if not req.t_first:            # prompt-only: prefill was the end
+            req.t_first = req.t_done
+        self._counters["retired"].inc()
+        self._h_ttft.observe(req.ttft_s)
+        self._h_latency.observe(req.latency_s)
+        tr = _trace.get_tracer()
+        if tr.enabled:
+            # request lifecycle as nested-looking phases on one lane per
+            # request: queued (submit->admit), prefill (admit->first
+            # token), decode (first token->retire)
+            lane = f"req {req.rid}"
+            tr.event_span("request.queued", req.t_submit, req.t_admit,
+                          lane=lane, process="requests", rid=req.rid)
+            tr.event_span("request.prefill", req.t_admit, req.t_first,
+                          lane=lane, process="requests", rid=req.rid,
+                          prompt_len=int(req.prompt.size))
+            if req.t_done > req.t_first:
+                tr.event_span("request.decode", req.t_first, req.t_done,
+                              lane=lane, process="requests", rid=req.rid,
+                              tokens=len(req.generated))
+            tr.event_span("request", req.t_submit, req.t_done, lane=lane,
+                          process="requests", rid=req.rid,
+                          ttft_s=req.ttft_s, latency_s=req.latency_s)

@@ -19,6 +19,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticTokens
 from repro.models import lm
+from repro.obs import trace as _trace
 from repro.optim import make_optimizer
 from .steps import make_train_step
 
@@ -59,8 +60,12 @@ def run_training(cfg, workdir: str, steps: int, seq_len: int = 128,
             raise InjectedFailure(f"injected failure at step {step}")
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
         _extend_modality(batch, cfg)
-        params, opt_state, metrics = jit_step(params, opt_state, batch)
-        loss = float(metrics["loss"])
+        # the float() below already syncs on the result, so the span
+        # covers real step time even without an explicit block
+        with _trace.span("train.step", step=step) as sp:
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            sp.args["loss"] = loss
         history.append((step, loss))
         if not np.isfinite(loss):
             raise FloatingPointError(f"non-finite loss at step {step}")
