@@ -102,6 +102,15 @@ class Backend:
             return True
         return all(t in registry for t in _plan_types(plan, sched))
 
+    def compiled_kernels(self) -> bool:
+        """Capability probe: True when this backend executes its device
+        kernels natively compiled for the local runtime (as opposed to
+        host dispatch or Pallas interpret mode).  Callers use it to pick
+        between a kernel-resident fast path and a jitted fallback — the
+        serving tier selects its paged-attention decode path this way
+        (DESIGN.md §Serving) — instead of sniffing platform names."""
+        return False
+
     def run(self, sched: QSched, plan: Optional[ExecutionPlan],
             registry: Mapping[int, BatchSpec], *, nr_workers: int = 1,
             engine: Optional[EngineHooks] = None) -> None:
@@ -168,6 +177,13 @@ class EngineBackend(Backend):
             return False
         return all(t in registry and registry[t].encode is not None
                    for t in _plan_types(plan, sched))
+
+    def compiled_kernels(self) -> bool:
+        # the engine's megakernels (and the serving tier's paged-attention
+        # kernel) compile natively only on TPU; everywhere else Pallas
+        # runs in interpret mode and jitted XLA fallbacks win
+        import jax
+        return jax.default_backend() == "tpu"
 
     def run(self, sched, plan, registry, *, nr_workers=1, engine=None):
         del nr_workers

@@ -18,7 +18,11 @@ A descriptor row is ``[engine_type, arg0, ..., arg{A-1}]`` (int32).  One
 direct-interaction work items); rows inherit the task's round, so every
 round's row slice stays conflict-free — rows of one round belong to tasks
 whose locked resource subtrees are disjoint (property-tested in
-``tests/test_engine_properties.py``).  Row order within a round mirrors
+``tests/test_engine_properties.py``).  Rows carry whatever per-item
+scalars the family's round function needs beyond identity — the serving
+tier's decode rows are ``[ENG_DECODE, slot, pos]`` so the per-slot
+page-walk bound rides the descriptor into the paged-attention kernel
+(DESIGN.md §Serving) instead of round-tripping through host state.  Row order within a round mirrors
 ``ExecutionPlan.execute``: typed batches in ascending type order, tasks in
 batch order — so the engine's observable sequencing matches the host
 rounds mode.  Virtual tasks encode to nothing; empty rounds lower to a

@@ -1,0 +1,19 @@
+"""Paged-attention decode kernel: in-kernel page-table walk.
+
+One Pallas kernel per attention flavor (GQA, MLA weight-absorbed) that
+decodes a batch of slots directly against the serving tier's paged block
+pool — scalar-prefetched page-table rows drive an in-kernel online-softmax
+walk over exactly the pages each slot occupies, and the new token's K/V is
+written into its single ``(page, offset)`` cell through aliased output
+refs.  Zero gather, zero scatter; DESIGN.md §Serving ("Paged-attention
+kernel")."""
+
+from .ops import paged_gqa_decode, paged_mla_decode
+from .ref import paged_gqa_decode_ref, paged_mla_decode_ref
+
+__all__ = [
+    "paged_gqa_decode",
+    "paged_mla_decode",
+    "paged_gqa_decode_ref",
+    "paged_mla_decode_ref",
+]

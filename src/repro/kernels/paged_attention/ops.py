@@ -1,0 +1,65 @@
+"""Public paged-attention decode ops over block-pool leaves.
+
+Both ops take the pool leaves exactly as :class:`repro.serve.BlockPool`
+owns them (page id on axis 0 of the per-layer slice), the per-slot page
+table rows and positions, and the new token's projected K/V — and return
+``(attention output, updated pool leaves)`` with the new cell written
+in-kernel through aliased refs.  The contract both implementations (and
+``ref.py``) share:
+
+* only pages listed in ``page_rows[t, : pos[t] // page_size + 1]`` are
+  read for slot ``t`` — never another slot's pages, never the tail of the
+  page table (property-tested against poisoned pool contents);
+* positions beyond ``pos[t]`` are masked out of the softmax;
+* the single cell ``(page_rows[t, pos[t] // page_size], pos[t] %
+  page_size)`` is written with the new token's K/V before attention, so
+  position ``pos[t]`` attends to itself.
+
+``interpret=None`` follows the repo-wide kernel default (compiled on TPU,
+Pallas interpret mode elsewhere) so CI exercises the identical walk.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import kernel
+
+
+def paged_gqa_decode(q, k_new, v_new, k_pool, v_pool, page_rows, pos, *,
+                     page_size: int,
+                     interpret: Optional[bool] = None) -> Tuple:
+    """GQA decode against a paged K/V pool.
+
+    q ``(bs, H, hd)``; k_new/v_new ``(bs, Hkv, hd)``; pools
+    ``(P, page_size, Hkv, hd)``; page_rows ``(bs, max_pages)`` int32;
+    pos ``(bs,)`` int32.  Returns ``(o (bs, H, hd), k_pool', v_pool')``.
+    """
+    return kernel.paged_gqa_call(q, k_new, v_new, k_pool, v_pool,
+                                 page_rows, pos, page_size=page_size,
+                                 interpret=interpret)
+
+
+def paged_mla_decode(q_eff, q_rope, c_new, r_new, c_pool, r_pool,
+                     page_rows, pos, *, page_size: int, scale: float,
+                     interpret: Optional[bool] = None) -> Tuple:
+    """Weight-absorbed MLA decode against the compressed latent pool.
+
+    q_eff ``(bs, H, lat)`` (q_nope absorbed through ``w_uk``); q_rope
+    ``(bs, H, rope)``; c_new ``(bs, lat)``; r_new ``(bs, rope)``; pools
+    ``(P, page_size, lat)`` / ``(P, page_size, rope)``.  Returns
+    ``(ctx (bs, H, lat), c_pool', r_pool')`` — the caller re-expands the
+    latent context through ``w_uv`` (``models/mla.py::mla_decode``).
+    """
+    return kernel.paged_mla_call(q_eff, q_rope, c_new, r_new, c_pool,
+                                 r_pool, page_rows, pos,
+                                 page_size=page_size, scale=scale,
+                                 interpret=interpret)
+
+
+def pages_occupied(pos: jnp.ndarray, page_size: int) -> jnp.ndarray:
+    """Pages slot(s) at position ``pos`` occupy including the cell being
+    written this step — the kernel's per-slot walk bound."""
+    return pos // page_size + 1

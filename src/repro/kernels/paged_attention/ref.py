@@ -1,0 +1,80 @@
+"""jnp references for the paged-attention decode ops.
+
+Same signatures and same access contract as ``ops.py`` — in particular the
+references only ever index the pool through ``page_rows``, so a pool whose
+*unlisted* pages are poisoned (NaN) must still produce finite, identical
+outputs.  The hypothesis suite (``tests/test_paged_properties.py``) pins
+the Pallas kernels against these references under exactly that poisoning.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _write_cell(pool, page_rows, pos, new, page_size):
+    pg = jnp.take_along_axis(page_rows, (pos // page_size)[:, None],
+                             axis=1)[:, 0]
+    return pool.at[pg, pos % page_size].set(new.astype(pool.dtype))
+
+
+def _masked_softmax(s, pos, window):
+    mask = jnp.arange(window)[None, None, :] <= pos[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def _zero_invalid(cache, pos, window):
+    """Zero gathered positions beyond ``pos`` so poisoned (NaN) contents
+    of not-yet-occupied cells can't leak through ``0 * NaN`` in the
+    einsums — their softmax weight is exactly 0 either way."""
+    shape = (cache.shape[0], window) + (1,) * (cache.ndim - 2)
+    mask = (jnp.arange(window)[None, :] <= pos[:, None]).reshape(shape)
+    return jnp.where(mask, cache, 0)
+
+
+def paged_gqa_decode_ref(q, k_new, v_new, k_pool, v_pool, page_rows, pos,
+                         *, page_size: int) -> Tuple:
+    bs, n_heads, hd = q.shape
+    k_pool = _write_cell(k_pool, page_rows, pos, k_new, page_size)
+    v_pool = _write_cell(v_pool, page_rows, pos, v_new, page_size)
+    window = page_rows.shape[1] * page_size
+    # gather ONLY the slot's own pages: (bs, window, Hkv, hd)
+    kc = _zero_invalid(
+        k_pool[page_rows].reshape((bs, window) + k_pool.shape[2:]),
+        pos, window)
+    vc = _zero_invalid(
+        v_pool[page_rows].reshape((bs, window) + v_pool.shape[2:]),
+        pos, window)
+    rep = n_heads // kc.shape[2]
+    if rep > 1:
+        kc = jnp.repeat(kc, rep, axis=2)
+        vc = jnp.repeat(vc, rep, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * hd ** -0.5
+    w = _masked_softmax(s, pos, window)
+    o = jnp.einsum("bhk,bkhd->bhd", w, vc.astype(jnp.float32))
+    return o.astype(q.dtype), k_pool, v_pool
+
+
+def paged_mla_decode_ref(q_eff, q_rope, c_new, r_new, c_pool, r_pool,
+                         page_rows, pos, *, page_size: int,
+                         scale: float) -> Tuple:
+    bs = q_eff.shape[0]
+    c_pool = _write_cell(c_pool, page_rows, pos, c_new, page_size)
+    r_pool = _write_cell(r_pool, page_rows, pos, r_new, page_size)
+    window = page_rows.shape[1] * page_size
+    cc = _zero_invalid(c_pool[page_rows].reshape(bs, window, -1),
+                       pos, window)                        # (bs, W, lat)
+    rc = _zero_invalid(r_pool[page_rows].reshape(bs, window, -1),
+                       pos, window)                        # (bs, W, rope)
+    s = (jnp.einsum("bhl,bkl->bhk", q_eff.astype(jnp.float32),
+                    cc.astype(jnp.float32))
+         + jnp.einsum("bhr,bkr->bhk", q_rope.astype(jnp.float32),
+                      rc.astype(jnp.float32))) * scale
+    w = _masked_softmax(s, pos, window)
+    ctx = jnp.einsum("bhk,bkl->bhl", w, cc.astype(jnp.float32))
+    return ctx.astype(q_eff.dtype), c_pool, r_pool

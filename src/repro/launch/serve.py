@@ -29,7 +29,7 @@ def _continuous_main(args) -> None:
     from repro.configs import get_config
     from repro.models import lm
     from repro.obs import enable as obs_enable, write_chrome_trace
-    from repro.serve import GenerateService
+    from repro.serve import GenerateService, SamplingParams
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -39,8 +39,12 @@ def _continuous_main(args) -> None:
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
     page = 8
     max_seq = -(-(args.prompt_len + args.new_tokens - 1) // page) * page
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, seed=args.seed)
     svc = GenerateService(params, cfg, max_batch=args.batch,
-                          max_seq=max_seq, page_size=page)
+                          max_seq=max_seq, page_size=page,
+                          decode_path=args.decode_path, sampling=sampling)
+    print(f"decode path: {svc.decode_path} (requested {args.decode_path})")
     rng = np.random.default_rng(args.seed)
     n_req = 3 * args.batch
     handles = []
@@ -76,6 +80,20 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--continuous", action="store_true",
                     help="run the repro.serve continuous-batching service")
+    ap.add_argument("--decode-path", default="auto",
+                    choices=["auto", "kernel", "bounded", "gather"],
+                    help="continuous mode: decode round function — auto "
+                         "probes the engine backend (paged-attention "
+                         "kernel where Pallas compiles natively, bounded "
+                         "gather elsewhere); kernel/bounded/gather force "
+                         "a path")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="continuous mode: 0 = greedy (default); >0 "
+                         "samples with one per-request PRNG stream "
+                         "seeded from --seed")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="continuous mode: truncate sampling to the k "
+                         "highest-probability tokens (0 = full vocab)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write a Chrome/Perfetto trace of the run "
                          "(continuous mode: request lifecycles, engine "

@@ -307,6 +307,116 @@ def _decode_attn_stack(params, cfg, cache, x, pos):
     return _scan_or_unroll(cfg, body, x, (stack, cache))
 
 
+def decode_step_paged(params: Params, cfg, leaves: Params,
+                      page_rows: jnp.ndarray, tokens: jnp.ndarray,
+                      pos: jnp.ndarray, *, page_size: int,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step straight against the block pool (attention
+    families only): tokens (B,1), page_rows (B, max_pages), pos (B,) →
+    (logits (B,V), updated pool leaves).  Per layer, the paged-attention
+    kernel (``kernels/paged_attention``) walks each slot's page table
+    in-kernel — no contiguous-cache gather, no scatter; the new token's
+    K/V lands in its ``(page, offset)`` cell through aliased refs.  The
+    non-cache halves (projections, MoE/MLP, logits) are identical to
+    :func:`decode_step`."""
+    fam = cfg.family
+    if fam not in ("dense", "vlm", "moe"):
+        raise ValueError(f"decode_step_paged supports attention families, "
+                         f"not {fam!r}")
+    x = params["embed"]["tok"][tokens]
+
+    def body(moe):
+        def step(h, inp):
+            lp, leaf_l = inp
+            h, leaf_l2 = _paged_decode_block(
+                lp, cfg, h, leaf_l, page_rows, pos, moe=moe,
+                page_size=page_size, interpret=interpret)
+            return h, leaf_l2
+        return step
+
+    if fam == "moe" and cfg.first_dense_layers:
+        nd = cfg.first_dense_layers
+        leaves_d = jax.tree.map(lambda a: a[:nd], leaves)
+        leaves_m = jax.tree.map(lambda a: a[nd:], leaves)
+        x, l0 = _scan_or_unroll(cfg, body(False), x,
+                                (params["dense_layers"], leaves_d))
+        x, l1 = _scan_or_unroll(cfg, body(True), x,
+                                (params["moe_layers"], leaves_m))
+        leaves = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                              l0, l1)
+    else:
+        stack = (params["layers"] if fam != "moe"
+                 else params["moe_layers"])
+        x, leaves = _scan_or_unroll(cfg, body(fam == "moe"), x,
+                                    (stack, leaves))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, x[:, 0]), leaves
+
+
+def _paged_decode_block(lp, cfg, h, leaf, page_rows, pos, *, moe: bool,
+                        page_size: int, interpret: Optional[bool]):
+    """One decoder layer against its per-layer pool slice ``leaf`` —
+    the paged twin of :func:`_decode_block`."""
+    from repro.kernels import paged_attention as paged_ops
+    from .layers import _qkv
+    b = h.shape[0]
+    hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+    p = lp["attn"]
+    if cfg.mla:
+        nope, vd, rd = cfg.qk_nope_dim, cfg.v_head_dim, cfg.qk_rope_dim
+        lat = cfg.kv_lora_rank
+        nh = cfg.n_heads
+        q_nope, q_rope = mla_mod._mla_q(p, cfg, hn, pos[:, None])
+        c_new, r_new = mla_mod._mla_kv_latent(p, cfg, hn, pos[:, None])
+        w_uk = p["wkv_b"].reshape(lat, nh, nope + vd)[..., :nope]
+        w_uv = p["wkv_b"].reshape(lat, nh, nope + vd)[..., nope:]
+        q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)
+        ctx, c_pool, r_pool = paged_ops.paged_mla_decode(
+            q_eff[:, 0], q_rope[:, 0], c_new[:, 0], r_new[:, 0],
+            leaf["c_kv"], leaf["k_rope"], page_rows, pos,
+            page_size=page_size, scale=(nope + rd) ** -0.5,
+            interpret=interpret)
+        o = jnp.einsum("bhl,lhv->bhv", ctx.astype(h.dtype), w_uv)
+        a = o.reshape(b, 1, -1) @ p["wo"]
+        leaf2 = {"c_kv": c_pool, "k_rope": r_pool}
+    else:
+        q, k, v = _qkv(p, cfg, hn, pos[:, None])
+        o, k_pool, v_pool = paged_ops.paged_gqa_decode(
+            q[:, 0], k[:, 0], v[:, 0], leaf["k"], leaf["v"],
+            page_rows, pos, page_size=page_size, interpret=interpret)
+        a = o.astype(h.dtype).reshape(b, 1, -1) @ p["wo"]
+        leaf2 = {"k": k_pool, "v": v_pool}
+    h = h + a
+    hn = rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+    if moe:
+        y, _ = moe_mod.moe_apply(lp["moe"], cfg, hn)
+    else:
+        y = mlp(lp["mlp"], hn)
+    return h + y, leaf2
+
+
+def sample_tokens(logits: jnp.ndarray, keys: jnp.ndarray,
+                  temperature: float, top_k: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Next-token selection for the serving tier: greedy argmax when
+    ``temperature == 0`` (the conformance oracle — keys pass through
+    untouched), otherwise temperature + optional top-k sampling with one
+    PRNG key per row.  ``keys`` is a ``(B, 2)`` uint32 stack of raw
+    threefry keys; each sampled row consumes a split, so repeated calls
+    under a fixed seed are deterministic.  Returns ``(tokens (B,) int32,
+    new keys)``."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32), keys
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k and top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(scaled, top_k)[0][:, -1]
+        scaled = jnp.where(scaled >= kth[:, None], scaled, -jnp.inf)
+    split = jax.vmap(jax.random.split)(keys)           # (B, 2, 2)
+    nxt = jax.vmap(jax.random.categorical)(split[:, 0], scaled)
+    return nxt.astype(jnp.int32), split[:, 1]
+
+
 def _decode_block(lp, cfg, h, cl, pos, moe: bool):
     hn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
     if cfg.mla:

@@ -7,11 +7,13 @@ open-loop synthetic request streams for the serving benchmark.
 """
 
 from .blockpool import AdmissionConflict, BlockPool, TT_PREFILL
-from .service import ENG_DECODE, GenerateService, Request, TT_DECODE
+from .service import (DECODE_PATHS, ENG_DECODE, GenerateService, Request,
+                      SamplingParams, TT_DECODE)
 from .traffic import SyntheticRequest, open_loop_trace
 
 __all__ = [
     "AdmissionConflict", "BlockPool", "TT_PREFILL",
-    "ENG_DECODE", "GenerateService", "Request", "TT_DECODE",
+    "DECODE_PATHS", "ENG_DECODE", "GenerateService", "Request",
+    "SamplingParams", "TT_DECODE",
     "SyntheticRequest", "open_loop_trace",
 ]

@@ -18,11 +18,34 @@ not beside the serving path — it *is* the serving path:
 * **Decode is an engine task family.**  Each service tick lowers the
   active slots as DECODE tasks (one locked state resource per slot) and
   runs them through the ``engine`` backend: ``BatchSpec.encode`` emits
-  ``[DECODE, slot]`` descriptor rows and the family's
-  :class:`~repro.core.backends.EngineHooks` round function gathers the
-  slots' pages, runs one fused ``serving.decode_step`` over the whole
-  batch, and scatters the new KV/state back — one jitted dispatch per
-  tick.
+  ``[DECODE, slot, pos]`` descriptor rows and the family's
+  :class:`~repro.core.backends.EngineHooks` round function decodes every
+  slot in one jitted dispatch per tick.  *Which* round function depends
+  on a capability probe of the backend registry
+  (``get_backend("engine").compiled_kernels()``):
+
+  - ``kernel`` — the paged-attention megakernel
+    (``kernels/paged_attention``) walks each slot's page table
+    *in-kernel* with an online softmax over only the pages the slot
+    occupies and writes the new K/V cell through aliased refs — zero
+    gather, zero scatter (natively compiled backends; forceable
+    elsewhere, where it runs in Pallas interpret mode for conformance);
+  - ``bounded`` — the jitted gather fallback, window-bounded: it
+    gathers/attends only ``ceil((max active pos + 1)/page_size)`` pages
+    per slot (a per-tick static from the descriptor positions), keeping
+    the work ∝ occupied pages contract on hosts without compiled Pallas
+    (the CPU/CI default);
+  - ``gather`` — PR 6's full-``max_seq``-window path, kept as the
+    conformance oracle the other two are pinned against token-for-token
+    (and the only path for the non-paged SSM family).
+
+* **Sampling is part of the decode family's buffers.**  Greedy argmax is
+  the default and the conformance oracle; :class:`SamplingParams` with
+  ``temperature > 0`` (plus optional top-k) threads one PRNG key per slot
+  through the engine buffers — re-seeded per request from
+  ``fold_in(seed, rid)`` at admission, split once per sampled token — so
+  a request's token stream is deterministic under a fixed seed no matter
+  how requests interleave.
 * **The plan cache is the compiled-module registry.**  Admission and
   decode graphs are canonical (structure depends only on the batch
   shape), so ``core.plan``'s structural-hash cache maps each batch shape
@@ -63,6 +86,21 @@ TT_DECODE = 1       # task type of the decode family
 ENG_DECODE = 1      # engine descriptor row etype for a decode item
 
 SUPPORTED_FAMILIES = ("dense", "moe", "ssm")
+DECODE_PATHS = ("auto", "kernel", "bounded", "gather")
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """How next tokens are chosen from decode logits.
+
+    The default (``temperature == 0``) is greedy argmax — the conformance
+    oracle, bitwise-independent of the PRNG buffer.  ``temperature > 0``
+    samples from the (optionally top-k-truncated) tempered distribution
+    with one threefry key per slot threaded through the engine buffers;
+    ``seed`` plus the request id fully determine a request's stream."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
 
 
 @dataclass
@@ -107,18 +145,33 @@ def _decode_row_access(row: Sequence[int]) -> Tuple[Tuple, Tuple]:
     return ((key,), (key,))
 
 
-def _make_decode_round_fn(cfg, paged: bool, page_size: int,
-                          max_pages: int) -> Callable:
-    """Build the family's engine round function (stable object per
-    service, so the engine's jitted segment runners cache per batch
-    shape).  Layout: ``desc[i] = [ENG_DECODE, slot]``; buffers =
-    ``(pool leaves, page_tables, tok, pos)``; statics = ``(params,)``."""
+def _finish_decode(leaves, pt, tok, pos, keys, slots, p_b, logits,
+                   sampling: SamplingParams):
+    """Common decode-round tail: pick next tokens and advance the slot
+    state.  Greedy leaves the key buffer untouched (bitwise oracle)."""
+    nxt, new_keys = serving_mod.sample_tokens(
+        logits, keys[slots], sampling.temperature, sampling.top_k)
+    if sampling.temperature > 0.0:
+        keys = keys.at[slots].set(new_keys)
+    return (leaves, pt, tok.at[slots].set(nxt),
+            pos.at[slots].set(p_b + 1), keys)
+
+
+def _make_decode_round_fn(cfg, paged: bool, page_size: int, max_pages: int,
+                          sampling: SamplingParams) -> Callable:
+    """The full-window gather round function — PR 6's path, now the
+    conformance oracle (``decode_path="gather"``) and the only path for
+    the non-paged SSM family.  Layout: ``desc[i] = [ENG_DECODE, slot,
+    pos]``; buffers = ``(pool leaves, page_tables, tok, pos, keys)``;
+    statics = ``(params,)``.  Stable object per service, so the engine's
+    jitted segment runners cache per batch shape."""
 
     def decode_round(desc, bounds, statics, buffers):
         del bounds                     # single write-colored phase
-        (params,) = statics
-        leaves, pt, tok, pos = buffers
+        params = statics[0]
+        leaves, pt, tok, pos, keys = buffers
         slots = desc[:, 1]
+        p_b = desc[:, 2]
         bs = desc.shape[0]
         ptb = pt[slots]                                     # (bs, MP)
         if paged:
@@ -129,7 +182,6 @@ def _make_decode_round_fn(cfg, paged: bool, page_size: int,
                 for k, leaf in leaves.items()}
         else:
             cache = {k: leaf[:, ptb[:, 0]] for k, leaf in leaves.items()}
-        p_b = pos[slots]
         logits, new_cache = serving_mod.decode_step(
             params, cfg, cache, tok[slots][:, None], p_b)
         out = dict(leaves)
@@ -147,9 +199,72 @@ def _make_decode_round_fn(cfg, paged: bool, page_size: int,
             sid = ptb[:, 0]
             for k, leaf in leaves.items():
                 out[k] = leaf.at[:, sid].set(new_cache[k])
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-        return (out, pt, tok.at[slots].set(nxt),
-                pos.at[slots].set(p_b + 1))
+        return _finish_decode(out, pt, tok, pos, keys, slots, p_b, logits,
+                              sampling)
+
+    return decode_round
+
+
+def _make_bounded_decode_round_fn(cfg, page_size: int,
+                                  sampling: SamplingParams) -> Callable:
+    """Window-bounded gather round function (``decode_path="bounded"``,
+    the default where Pallas is interpret-only): identical math to the
+    full-window path, but it gathers/attends only the first ``n_walk``
+    pages per slot, where ``n_walk = max(pos)//page_size + 1`` over the
+    round is carried as the *shape* of a dummy static
+    (``statics = (params, walk_token)``) so the engine re-specializes
+    exactly when the page-walk bound grows — work stays ∝ occupied pages,
+    like the kernel.  Bitwise-equal to the full window: every truncated
+    position is masked to ``-inf`` there anyway."""
+
+    def decode_round(desc, bounds, statics, buffers):
+        del bounds
+        params, walk = statics
+        n_walk = walk.shape[0]         # static page-walk bound this round
+        leaves, pt, tok, pos, keys = buffers
+        slots = desc[:, 1]
+        p_b = desc[:, 2]
+        bs = desc.shape[0]
+        win = pt[slots][:, :n_walk]                         # (bs, n_walk)
+        cache = {
+            k: leaf[:, win].reshape(
+                (leaf.shape[0], bs, n_walk * page_size) + leaf.shape[3:])
+            for k, leaf in leaves.items()}
+        logits, new_cache = serving_mod.decode_step(
+            params, cfg, cache, tok[slots][:, None], p_b)
+        page_ids = jnp.take_along_axis(
+            win, (p_b // page_size)[:, None], axis=1)[:, 0]
+        off = p_b % page_size
+        bidx = jnp.arange(bs)
+        out = {k: leaf.at[:, page_ids, off].set(
+                   new_cache[k][:, bidx, p_b])
+               for k, leaf in leaves.items()}
+        return _finish_decode(out, pt, tok, pos, keys, slots, p_b, logits,
+                              sampling)
+
+    return decode_round
+
+
+def _make_paged_decode_round_fn(cfg, page_size: int,
+                                sampling: SamplingParams) -> Callable:
+    """The paged-attention megakernel round function
+    (``decode_path="kernel"``): hand the pool leaves, page-table rows and
+    descriptor positions straight to ``serving.decode_step_paged``, which
+    walks each slot's pages in-kernel and writes the new cell through
+    aliased refs — no gather, no scatter, no ``max_seq``-shaped
+    intermediate."""
+
+    def decode_round(desc, bounds, statics, buffers):
+        del bounds
+        params = statics[0]
+        leaves, pt, tok, pos, keys = buffers
+        slots = desc[:, 1]
+        p_b = desc[:, 2]
+        logits, new_leaves = serving_mod.decode_step_paged(
+            params, cfg, leaves, pt[slots], tok[slots][:, None], p_b,
+            page_size=page_size)
+        return _finish_decode(new_leaves, pt, tok, pos, keys, slots, p_b,
+                              logits, sampling)
 
     return decode_round
 
@@ -166,15 +281,32 @@ class GenerateService:
 
     def __init__(self, params: Any, cfg, *, max_batch: int = 4,
                  max_seq: int = 64, page_size: int = 8,
-                 n_pages: Optional[int] = None, nr_lanes: int = 1):
+                 n_pages: Optional[int] = None, nr_lanes: int = 1,
+                 decode_path: str = "auto",
+                 sampling: Optional[SamplingParams] = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
                 f"GenerateService supports families {SUPPORTED_FAMILIES}, "
                 f"not {cfg.family!r} (extra per-request inputs / trunk+"
                 f"shared split not wired up yet)")
+        if decode_path not in DECODE_PATHS:
+            raise ValueError(
+                f"decode_path must be one of {DECODE_PATHS}, "
+                f"not {decode_path!r}")
         self.params = params
         self.cfg = cfg
         self.paged = cfg.family != "ssm"
+        self.sampling = sampling or SamplingParams()
+        # capability probe, not platform sniffing: the kernel path wins
+        # only where the engine backend compiles Pallas natively
+        if not self.paged:
+            decode_path = "gather"     # SSM state is O(1) — nothing paged
+        elif decode_path == "auto":
+            from repro.core.backends import get_backend
+            decode_path = ("kernel"
+                           if get_backend("engine").compiled_kernels()
+                           else "bounded")
+        self.decode_path = decode_path
         if self.paged and max_seq % page_size != 0:
             raise ValueError("max_seq must be a multiple of page_size")
         self.max_batch = max_batch
@@ -191,28 +323,42 @@ class GenerateService:
         self._pt = jnp.zeros((max_batch, self.max_pages), jnp.int32)
         self._tok = jnp.zeros((max_batch,), jnp.int32)
         self._pos = jnp.zeros((max_batch,), jnp.int32)
+        # one raw threefry key row per slot; admission overwrites the
+        # slot's row with fold_in(seed, rid) so a request's sample stream
+        # depends only on (seed, rid), not on scheduling history
+        self._keys = jnp.zeros((max_batch, 2), jnp.uint32)
         self._free_slots: List[int] = list(range(max_batch - 1, -1, -1))
         self._active: Dict[int, Request] = {}
         self._queue: Deque[Request] = deque()
         self._next_rid = 0
 
-        # batch-shape-specialized jitted entry points: prefill per prompt
-        # length (SHARK's prefill_bs{n} dict, keyed by shape instead of
-        # symbol name); decode specializations live in the engine's
-        # segment-runner jit cache, one per batch size seen
-        self._prefill_fns: Dict[int, Callable] = {}
+        # batch-shape-specialized jitted entry points: prefill per
+        # (prompt length, batch size) — SHARK's prefill_bs{n} dict, keyed
+        # by shape instead of symbol name, with same-plen admissions
+        # sharing one batched entry point; decode specializations live in
+        # the engine's segment-runner jit cache, one per batch size seen
+        self._prefill_fns: Dict[Tuple[int, int], Callable] = {}
         self.decode_batch_sizes_seen: set = set()
 
         self.registry = {
-            TT_PREFILL: BatchSpec(run_one=self._run_prefill),
+            TT_PREFILL: BatchSpec(run_one=self._run_prefill,
+                                  run_batch=self._run_prefill_batch),
             TT_DECODE: BatchSpec(run_one=self._no_host_decode,
                                  encode=self._encode_decode),
         }
+        if self.decode_path == "kernel":
+            round_fn = _make_paged_decode_round_fn(
+                cfg, self.pool.page_size, self.sampling)
+        elif self.decode_path == "bounded":
+            round_fn = _make_bounded_decode_round_fn(
+                cfg, self.pool.page_size, self.sampling)
+        else:
+            round_fn = _make_decode_round_fn(
+                cfg, self.paged, self.pool.page_size, self.max_pages,
+                self.sampling)
         self.hooks = EngineHooks(
-            arg_width=1,
-            round_fn=_make_decode_round_fn(cfg, self.paged,
-                                           self.pool.page_size,
-                                           self.max_pages),
+            arg_width=2,
+            round_fn=round_fn,
             statics=self._statics,
             buffers=self._buffers,
             writeback=self._writeback,
@@ -228,7 +374,7 @@ class GenerateService:
         self._counters = {k: self.metrics.counter(f"serve.{k}")
                           for k in ("submitted", "admitted", "retired",
                                     "steps", "decode_items",
-                                    "generated_tokens")}
+                                    "generated_tokens", "pages_attended")}
         self._g_pages = self.metrics.gauge("serve.pages_in_use")
         self._g_queue = self.metrics.gauge("serve.queue_depth")
         self._g_active = self.metrics.gauge("serve.active_slots")
@@ -269,14 +415,27 @@ class GenerateService:
         self._admit()
         slots = sorted(self._active)
         if slots:
+            # pages each slot's walk touches this tick (incl. the cell
+            # being written) — what the kernel/bounded paths actually
+            # read, and the honest work metric for the gather oracle too
+            ps = self.pool.page_size
+            pages = (sum(self._active[s].pos // ps + 1 for s in slots)
+                     if self.paged else len(slots))
+            tr = _trace.get_tracer()
+            t0 = _trace.now()
             sched = self._decode_sched(slots)
             plan = lower(sched, self.nr_lanes)
             run_plan(sched, self.registry, "engine", plan=plan,
                      engine=self.hooks)
             self.decode_batch_sizes_seen.add(len(slots))
             self._counters["decode_items"].inc(len(slots))
+            self._counters["pages_attended"].inc(pages)
             tok_h = np.asarray(self._tok)      # one sync per tick
             pos_h = np.asarray(self._pos)
+            if tr.enabled:
+                tr.event_span("serve.decode", t0, _trace.now(),
+                              lane="engine", path=self.decode_path,
+                              batch=len(slots), pages_attended=pages)
             for slot in slots:
                 req = self._active[slot]
                 req.generated.append(int(tok_h[slot]))
@@ -296,10 +455,12 @@ class GenerateService:
                 return
         raise RuntimeError(f"service did not drain in {max_steps} steps")
 
-    def compiled_entry_points(self) -> Dict[str, List[int]]:
+    def compiled_entry_points(self) -> Dict[str, List]:
         """The service's module registry: which specialized entry points
-        exist (prefill by prompt length, decode by batch size)."""
-        return {"prefill_plens": sorted(self._prefill_fns),
+        exist (prefill by (prompt length, batch size), decode by batch
+        size)."""
+        return {"prefill_plens": sorted({p for p, _ in self._prefill_fns}),
+                "prefill_shapes": sorted(self._prefill_fns),
                 "decode_batch_sizes": sorted(self.decode_batch_sizes_seen)}
 
     # -- admission (conflict round + prefill family) -------------------------
@@ -333,83 +494,133 @@ class GenerateService:
         return len(batch)
 
     def _run_prefill(self, tid: int, req: Request) -> None:
-        plen = int(req.prompt.size)
-        fn = self._prefill_fns.get(plen)
-        if fn is None:
-            fn = self._prefill_fns[plen] = self._make_prefill_fn(plen)
-        # only the first ceil(plen/ps) pages hold prompt positions; the
-        # rest of the request's pages fill one decode-scatter at a time
-        prompt_pages = req.pages[:self.pool.pages_needed(plen)]
-        pt_row = np.zeros((self.max_pages,), np.int32)
-        pt_row[:len(req.pages)] = req.pages
-        tok0, self.pool.leaves, self._pt, self._tok, self._pos = fn(
-            self.params, jnp.asarray(req.prompt[None]), self.pool.leaves,
-            jnp.asarray(np.asarray(prompt_pages, np.int32)),
-            jnp.asarray(pt_row), req.slot, self._pt, self._tok, self._pos)
-        req.generated.append(int(tok0))
-        req.pos = plen
-        req.t_first = _trace.now()     # prefill yields the first token
-        self._active[req.slot] = req
-        self._counters["generated_tokens"].inc()
+        self._prefill_group([req])
 
-    def _make_prefill_fn(self, plen: int) -> Callable:
+    def _run_prefill_batch(self, tids: Sequence[int],
+                           reqs: Sequence[Request]) -> None:
+        """Batched multi-request prefill: same-length prompts admitted in
+        one conflict round share one jitted entry point (one forward pass
+        over a ``(nb, plen)`` token block instead of nb B=1 calls)."""
+        groups: Dict[int, List[Request]] = {}
+        for req in reqs:
+            groups.setdefault(int(req.prompt.size), []).append(req)
+        for group in groups.values():
+            self._prefill_group(group)
+
+    def _prefill_group(self, reqs: List[Request]) -> None:
+        plen = int(reqs[0].prompt.size)
+        nb = len(reqs)
+        fn = self._prefill_fns.get((plen, nb))
+        if fn is None:
+            fn = self._prefill_fns[(plen, nb)] = self._make_prefill_fn(
+                plen, nb)
+        np_p = self.pool.pages_needed(plen)
+        # only the first ceil(plen/ps) pages hold prompt positions; the
+        # rest of each request's pages fill one decode-scatter at a time
+        page_ids = np.zeros((nb, np_p), np.int32)
+        pt_rows = np.zeros((nb, self.max_pages), np.int32)
+        slots = np.zeros((nb,), np.int32)
+        base_key = jax.random.PRNGKey(self.sampling.seed)
+        req_keys = np.stack(
+            [np.asarray(jax.random.fold_in(base_key, req.rid))
+             for req in reqs])
+        for i, req in enumerate(reqs):
+            page_ids[i] = req.pages[:np_p]
+            pt_rows[i, :len(req.pages)] = req.pages
+            slots[i] = req.slot
+        tokens = np.stack([req.prompt for req in reqs])
+        (tok0, self.pool.leaves, self._pt, self._tok, self._pos,
+         self._keys) = fn(
+            self.params, jnp.asarray(tokens), self.pool.leaves,
+            jnp.asarray(page_ids), jnp.asarray(pt_rows),
+            jnp.asarray(slots), jnp.asarray(req_keys), self._pt,
+            self._tok, self._pos, self._keys)
+        tok0_h = np.asarray(tok0)
+        t = _trace.now()               # prefill yields the first token
+        for i, req in enumerate(reqs):
+            req.generated.append(int(tok0_h[i]))
+            req.pos = plen
+            req.t_first = t
+            self._active[req.slot] = req
+            self._counters["generated_tokens"].inc()
+
+    def _make_prefill_fn(self, plen: int, nb: int) -> Callable:
         cfg = self.cfg
         paged = self.paged
         ps = self.pool.page_size
         np_p = self.pool.pages_needed(plen)
         pad_to = np_p * ps - plen
+        sampling = self.sampling
 
         @jax.jit
-        def prefill_entry(params, tokens, leaves, page_ids, pt_row, slot,
-                          pt, tok, pos):
+        def prefill_entry(params, tokens, leaves, page_ids, pt_rows,
+                          slots, req_keys, pt, tok, pos, keys):
             logits, cache, _ = serving_mod.prefill(params, cfg, tokens)
             out = dict(leaves)
             if paged:
                 for k, leaf in leaves.items():
-                    c = cache[k][:, 0]                   # (L, plen, ...)
-                    c = jnp.pad(c, [(0, 0), (0, pad_to)]
-                                + [(0, 0)] * (c.ndim - 2))
-                    c = c.reshape((c.shape[0], np_p, ps) + c.shape[2:])
+                    c = cache[k]                     # (L, nb, plen, ...)
+                    c = jnp.pad(c, [(0, 0), (0, 0), (0, pad_to)]
+                                + [(0, 0)] * (c.ndim - 3))
+                    c = c.reshape((c.shape[0], nb, np_p, ps) + c.shape[3:])
                     out[k] = leaf.at[:, page_ids].set(c.astype(leaf.dtype))
             else:
                 for k, leaf in leaves.items():
-                    out[k] = leaf.at[:, page_ids[0]].set(
-                        cache[k][:, 0].astype(leaf.dtype))
-            tok0 = jnp.argmax(logits[0], -1).astype(jnp.int32)
-            return (tok0, out, pt.at[slot].set(pt_row),
-                    tok.at[slot].set(tok0), pos.at[slot].set(plen))
+                    out[k] = leaf.at[:, page_ids[:, 0]].set(
+                        cache[k].astype(leaf.dtype))
+            keys = keys.at[slots].set(req_keys)
+            tok0, new_keys = serving_mod.sample_tokens(
+                logits, keys[slots], sampling.temperature, sampling.top_k)
+            if sampling.temperature > 0.0:
+                keys = keys.at[slots].set(new_keys)
+            return (tok0, out, pt.at[slots].set(pt_rows),
+                    tok.at[slots].set(tok0), pos.at[slots].set(plen),
+                    keys)
 
         return prefill_entry
 
     # -- decode (engine task family) -----------------------------------------
     def _decode_sched(self, slots: Sequence[int]) -> QSched:
         """Canonical decode graph: one DECODE task per active slot locking
-        one state resource under a root — structure (and hence the plan
-        cache key) depends only on the batch size."""
+        one state resource under a root.  The payload carries ``(slot,
+        pos)`` — task *data* is excluded from the structural hash, so the
+        plan cache key still depends only on the batch size even though
+        positions change every tick."""
         s = QSched()
         root = s.addres()
         for slot in slots:
             rid = s.addres(parent=root)
-            tid = s.addtask(type=TT_DECODE, data=int(slot))
+            tid = s.addtask(type=TT_DECODE,
+                            data=(int(slot), int(self._active[slot].pos)))
             s.addlock(tid, rid)
         return s
 
-    def _encode_decode(self, tid: int, slot: int):
-        return [(ENG_DECODE, int(slot))]
+    def _encode_decode(self, tid: int, data: Tuple[int, int]):
+        slot, pos = data
+        return [(ENG_DECODE, int(slot), int(pos))]
 
-    def _no_host_decode(self, tid: int, slot: int) -> None:
+    def _no_host_decode(self, tid: int, data) -> None:
         raise NotImplementedError(
             "the decode family is device-resident; run it through the "
             "'engine' backend")
 
     def _statics(self) -> Tuple:
-        return (self.params,)
+        if self.decode_path != "bounded":
+            return (self.params,)
+        # page-walk bound for this round, carried as the SHAPE of a dummy
+        # static so the engine's jit cache re-specializes exactly when the
+        # bound grows (descriptor *values* never retrace; shapes do)
+        mx = max((r.pos for r in self._active.values()), default=0)
+        n_walk = min(self.max_pages, mx // self.pool.page_size + 1)
+        return (self.params, jnp.zeros((n_walk,), jnp.int32))
 
     def _buffers(self) -> Tuple:
-        return (self.pool.leaves, self._pt, self._tok, self._pos)
+        return (self.pool.leaves, self._pt, self._tok, self._pos,
+                self._keys)
 
     def _writeback(self, buffers: Tuple) -> None:
-        self.pool.leaves, self._pt, self._tok, self._pos = buffers
+        (self.pool.leaves, self._pt, self._tok, self._pos,
+         self._keys) = buffers
 
     def _sample_gauges(self) -> None:
         """Sample occupancy/depth gauges and, when a tracer is enabled,
@@ -425,6 +636,8 @@ class GenerateService:
             tr.counter("serve.pages_in_use", in_use, t=t)
             tr.counter("serve.queue_depth", len(self._queue), t=t)
             tr.counter("serve.active_slots", len(self._active), t=t)
+            tr.counter("serve.pages_attended",
+                       self._counters["pages_attended"].value, t=t)
 
     def _retire(self, req: Request) -> None:
         self.pool.free(req.pages)

@@ -23,6 +23,7 @@ _HYPOTHESIS_SUITES = [
     "test_kernels_flash.py",
     "test_kernels_nbody.py",
     "test_kernels_qr.py",
+    "test_paged_properties.py",
 ]
 
 collect_ignore = ([] if importlib.util.find_spec("hypothesis") is not None

@@ -1,0 +1,124 @@
+"""Property tests for the paged-attention decode kernels.
+
+The access contract (``kernels/paged_attention/ops.py``): for slot ``t``
+the kernel may touch ONLY the pages listed in
+``page_rows[t, : pos[t]//page_size + 1]``.  We enforce it the blunt way —
+every pool page *not* listed in any slot's walked prefix is poisoned with
+NaN, and every unlisted page-table tail entry points at a poisoned page.
+If the kernel ever reads outside its walk, NaN propagates through the
+softmax and the (finite) comparison against the jnp reference fails.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels.paged_attention import (paged_gqa_decode,
+                                           paged_gqa_decode_ref,
+                                           paged_mla_decode,
+                                           paged_mla_decode_ref)
+
+
+@st.composite
+def layouts(draw):
+    """A random paged layout: disjoint per-slot page lists plus ragged
+    positions, with enough spare pages that some are never listed."""
+    bs = draw(st.integers(1, 3))
+    page_size = draw(st.sampled_from([4, 8]))
+    max_pages = draw(st.integers(2, 4))
+    n_pages = bs * max_pages + draw(st.integers(1, 3))   # spare pages
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_pages)
+    pos = np.array([draw(st.integers(0, max_pages * page_size - 1))
+                    for _ in range(bs)], np.int32)
+    page_rows = np.zeros((bs, max_pages), np.int32)
+    walked = set()
+    k = 0
+    for t in range(bs):
+        n_walk = pos[t] // page_size + 1
+        page_rows[t, :n_walk] = perm[k:k + n_walk]
+        walked.update(int(p) for p in perm[k:k + n_walk])
+        k += n_walk
+        # the tail of the page table points at pages the slot does NOT
+        # occupy yet — they are poisoned, so reading them is detected
+        page_rows[t, n_walk:] = perm[-1]
+    return bs, page_size, max_pages, n_pages, page_rows, pos, walked, seed
+
+
+def _poison(pool, walked):
+    """NaN every page not in any slot's walked prefix."""
+    mask = np.ones(pool.shape[0], bool)
+    mask[list(walked)] = False
+    pool = np.asarray(pool).copy()
+    pool[mask] = np.nan
+    return jnp.asarray(pool)
+
+
+def _gqa_case(layout):
+    bs, ps, mp, n_pages, page_rows, pos, walked, seed = layout
+    rng = np.random.default_rng(seed + 1)
+    n_heads, n_kv, hd = 4, 2, 8
+    mk = lambda s: jnp.asarray(rng.standard_normal(s) * 0.5, jnp.float32)
+    q = mk((bs, n_heads, hd))
+    k_new, v_new = mk((bs, n_kv, hd)), mk((bs, n_kv, hd))
+    k_pool = _poison(mk((n_pages, ps, n_kv, hd)), walked)
+    v_pool = _poison(mk((n_pages, ps, n_kv, hd)), walked)
+    pr, po = jnp.asarray(page_rows), jnp.asarray(pos)
+    o, kp, vp = paged_gqa_decode(q, k_new, v_new, k_pool, v_pool, pr, po,
+                                 page_size=ps, interpret=True)
+    assert np.isfinite(np.asarray(o)).all(), \
+        "kernel read a poisoned (unlisted) page"
+    ro, rk, rv = paged_gqa_decode_ref(q, k_new, v_new, k_pool, v_pool,
+                                      pr, po, page_size=ps)
+    assert_allclose(np.asarray(o), np.asarray(ro), atol=1e-5, rtol=1e-5)
+    # the write side of the contract: exactly the walked cells match the
+    # reference pools (poisoned pages stay poisoned in both)
+    for got, want in ((kp, rk), (vp, rv)):
+        got, want = np.asarray(got), np.asarray(want)
+        for t in range(bs):
+            n_walk = pos[t] // ps + 1
+            pages = page_rows[t, :n_walk]
+            assert_allclose(got[pages], want[pages], atol=0, rtol=0)
+
+
+def _mla_case(layout):
+    bs, ps, mp, n_pages, page_rows, pos, walked, seed = layout
+    rng = np.random.default_rng(seed + 2)
+    n_heads, lat, rope = 4, 16, 8
+    mk = lambda s: jnp.asarray(rng.standard_normal(s) * 0.5, jnp.float32)
+    q_eff, q_rope = mk((bs, n_heads, lat)), mk((bs, n_heads, rope))
+    c_new, r_new = mk((bs, lat)), mk((bs, rope))
+    c_pool = _poison(mk((n_pages, ps, lat)), walked)
+    r_pool = _poison(mk((n_pages, ps, rope)), walked)
+    pr, po = jnp.asarray(page_rows), jnp.asarray(pos)
+    scale = (lat + rope) ** -0.5
+    ctx, cp, rp = paged_mla_decode(q_eff, q_rope, c_new, r_new, c_pool,
+                                   r_pool, pr, po, page_size=ps,
+                                   scale=scale, interpret=True)
+    assert np.isfinite(np.asarray(ctx)).all(), \
+        "kernel read a poisoned (unlisted) page"
+    rctx, rc, rr = paged_mla_decode_ref(q_eff, q_rope, c_new, r_new,
+                                        c_pool, r_pool, pr, po,
+                                        page_size=ps, scale=scale)
+    assert_allclose(np.asarray(ctx), np.asarray(rctx), atol=1e-5, rtol=1e-5)
+    for got, want in ((cp, rc), (rp, rr)):
+        got, want = np.asarray(got), np.asarray(want)
+        for t in range(bs):
+            n_walk = pos[t] // ps + 1
+            pages = page_rows[t, :n_walk]
+            assert_allclose(got[pages], want[pages], atol=0, rtol=0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(layouts())
+def test_gqa_kernel_never_reads_unlisted_pages(layout):
+    _gqa_case(layout)
+
+
+@settings(max_examples=12, deadline=None)
+@given(layouts())
+def test_mla_kernel_never_reads_unlisted_pages(layout):
+    _mla_case(layout)
