@@ -95,14 +95,15 @@ def static_batch_run(params, cfg, static_prefill, serve_step, trace):
     return out_tokens
 
 
-def _decode_round_time(params, cfg, prompts, decode_path):
-    """Per-call wall time of one service's decode round function at fixed
-    occupancy: admit a full batch, pin every slot to ``MICRO_POS``, then
-    time the jitted round function on one frozen descriptor/buffer set —
-    scheduling and host-sync overhead excluded, decode math isolated."""
+def _decode_round_setup(params, cfg, prompts, decode_path, guard=True):
+    """Build one service's jitted decode round function at fixed
+    occupancy, warmed: admit a full batch, pin every slot to
+    ``MICRO_POS``, freeze one descriptor/buffer set.  Returns a zero-arg
+    timed call plus the resolved path — scheduling and host-sync overhead
+    excluded, decode math isolated."""
     svc = GenerateService(params, cfg, max_batch=MAX_BATCH,
                           max_seq=MICRO_SEQ, page_size=PAGE,
-                          decode_path=decode_path)
+                          decode_path=decode_path, guard=guard)
     for p in prompts:
         svc.submit(p, 2)
     svc._admit()
@@ -114,11 +115,25 @@ def _decode_round_time(params, cfg, prompts, decode_path):
     fn = jax.jit(svc.hooks.round_fn)
     statics, bufs = svc._statics(), svc._buffers()
     jax.block_until_ready(fn(desc, None, statics, bufs))    # compile
+
+    def call():
+        return fn(desc, None, statics, bufs)
+
+    return call, svc.decode_path
+
+
+def _time_call(call, iters):
     t0 = time.perf_counter()
-    for _ in range(MICRO_ITERS):
-        out = fn(desc, None, statics, bufs)
+    for _ in range(iters):
+        out = call()
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / MICRO_ITERS, svc.decode_path
+    return (time.perf_counter() - t0) / iters
+
+
+def _decode_round_time(params, cfg, prompts, decode_path, guard=True):
+    call, path = _decode_round_setup(params, cfg, prompts, decode_path,
+                                     guard)
+    return _time_call(call, MICRO_ITERS), path
 
 
 def decode_microbench(params, cfg):
@@ -140,6 +155,33 @@ def decode_microbench(params, cfg):
         "round_ms": t_fast * 1e3,
         "gather_round_ms": t_slow * 1e3,
         "decode_speedup": t_slow / t_fast,
+    }
+
+
+def guard_microbench(params, cfg):
+    """Fault-free cost of the decode guard (post-round finiteness check +
+    per-slot flag writeback, DESIGN.md §Robustness) on the selected
+    path: same round function with and without the guard compiled in.
+    CI gates the overhead at <= 5% (or a small absolute floor — at smoke
+    size a round is sub-millisecond and the ratio is noise-dominated)."""
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, size=PLEN, dtype=np.int32)
+               for _ in range(MAX_BATCH)]
+    on, path = _decode_round_setup(params, cfg, prompts, "auto", guard=True)
+    off, _ = _decode_round_setup(params, cfg, prompts, "auto", guard=False)
+    # interleave timing blocks and keep each variant's best: transient
+    # machine load hits both variants, not whichever ran second
+    ts_on, ts_off = [], []
+    for _ in range(5):
+        ts_on.append(_time_call(on, MICRO_ITERS))
+        ts_off.append(_time_call(off, MICRO_ITERS))
+    t_on, t_off = min(ts_on), min(ts_off)
+    return {
+        "path": path,
+        "round_ms_guarded": t_on * 1e3,
+        "round_ms_unguarded": t_off * 1e3,
+        "overhead_ratio": t_on / t_off,
+        "overhead_us": (t_on - t_off) * 1e6,
     }
 
 
@@ -175,6 +217,7 @@ def main() -> None:
                                                key=lambda r: r.arrival_step)))
 
     micro = decode_microbench(params, cfg)
+    guard = guard_microbench(params, cfg)
 
     cont_steps = svc.stats["steps"] - warm_stats["steps"]
     out = {
@@ -190,9 +233,11 @@ def main() -> None:
                        "decode_items": svc.stats["decode_items"]
                        - warm_stats["decode_items"],
                        "entry_points": svc.compiled_entry_points()},
-        "speedup": t_static / t_cont,
+        "speedup": t_static / t_cont,       # continuous runs guard-on
         "decode": micro,
         "decode_speedup": micro["decode_speedup"],
+        "guard": guard,
+        "guard_overhead_ratio": guard["overhead_ratio"],
     }
     emit("serve_static_tok_s", t_static / useful * 1e6,
          f"tok_s={out['static']['tok_s']:.1f} steps={static_steps}")
@@ -203,6 +248,10 @@ def main() -> None:
          f"{micro['path']} {micro['round_ms']:.2f}ms vs gather "
          f"{micro['gather_round_ms']:.2f}ms = "
          f"{micro['decode_speedup']:.2f}x at pos={micro['pos']}")
+    emit("serve_guard_overhead", guard["overhead_ratio"],
+         f"guarded {guard['round_ms_guarded']:.2f}ms vs unguarded "
+         f"{guard['round_ms_unguarded']:.2f}ms = "
+         f"{guard['overhead_ratio']:.3f}x ({guard['overhead_us']:+.0f}us)")
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
     path.write_text(json.dumps(out, indent=2) + "\n")
     emit("serve_json", 0, str(path))

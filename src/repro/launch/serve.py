@@ -29,7 +29,8 @@ def _continuous_main(args) -> None:
     from repro.configs import get_config
     from repro.models import lm
     from repro.obs import enable as obs_enable, write_chrome_trace
-    from repro.serve import GenerateService, SamplingParams
+    from repro.serve import FaultPlan, GenerateService, QueueFull, \
+        SamplingParams
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -41,10 +42,19 @@ def _continuous_main(args) -> None:
     max_seq = -(-(args.prompt_len + args.new_tokens - 1) // page) * page
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
+    faults = None
+    if args.chaos_seed is not None:
+        faults = FaultPlan.seeded(args.chaos_seed, args.chaos_ticks)
+        print(f"chaos: seed={args.chaos_seed} over {args.chaos_ticks} "
+              f"ticks -> {faults.summary()}")
     svc = GenerateService(params, cfg, max_batch=args.batch,
                           max_seq=max_seq, page_size=page,
-                          decode_path=args.decode_path, sampling=sampling)
-    print(f"decode path: {svc.decode_path} (requested {args.decode_path})")
+                          decode_path=args.decode_path, sampling=sampling,
+                          max_queue=args.max_queue,
+                          deadline_ms=args.deadline_ms,
+                          guard=not args.no_guard, faults=faults)
+    print(f"decode path: {svc.decode_path} (requested {args.decode_path}, "
+          f"guard={'on' if svc.guard else 'off'})")
     rng = np.random.default_rng(args.seed)
     n_req = 3 * args.batch
     handles = []
@@ -52,14 +62,27 @@ def _continuous_main(args) -> None:
         prompt = rng.integers(0, cfg.vocab, args.prompt_len, dtype=np.int32)
         budget = int(rng.choice([args.new_tokens // 8 or 1,
                                  args.new_tokens // 2 or 1, args.new_tokens]))
-        handles.append(svc.submit(prompt, budget))
+        try:
+            handles.append(svc.submit(prompt, budget))
+        except QueueFull as e:
+            print(f"  rejected (queue {e.queue_depth}/{e.max_queue})")
     t0 = time.time()
     svc.run_until_complete()
     dt = time.time() - t0
     done = svc.stats["generated_tokens"]
-    print(f"continuous: {n_req} requests, {done} tokens in "
+    print(f"continuous: {len(handles)} requests, {done} tokens in "
           f"{svc.stats['steps']} steps, {dt:.2f}s ({done / dt:.1f} tok/s)")
     print(f"entry points: {svc.compiled_entry_points()}")
+    s = svc.stats
+    print(f"robustness: retries={s['retries']} "
+          f"preemptions={s['preemptions']} rejected={s['rejected']} "
+          f"deadline_exceeded={s['deadline_exceeded']} "
+          f"cancelled={s['cancelled']} faults_injected={s['faults_injected']}")
+    from collections import Counter
+    print(f"terminal states: {dict(Counter(h.status for h in handles))}")
+    assert all(h.done for h in handles), "a request never reached a terminal state"
+    assert svc.pool.allocated == 0, "pages leaked"
+    svc.pool.check_invariants()
     if args.trace:
         info = write_chrome_trace(args.trace, registry=svc.metrics)
         print(f"trace: {args.trace} ({info['events']} events, "
@@ -94,6 +117,26 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=0,
                     help="continuous mode: truncate sampling to the k "
                          "highest-probability tokens (0 = full vocab)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="continuous mode: default per-request deadline; "
+                         "an active request past it is preempted, its "
+                         "pages reclaimed, and retired DEADLINE_EXCEEDED")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="continuous mode: bound the admission queue — "
+                         "submissions past the bound are rejected with "
+                         "QueueFull instead of growing without limit")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="continuous mode: inject a seeded FaultPlan "
+                         "(NaN-poisoned decode rounds, admission "
+                         "failures, prefill-cache drops) and assert the "
+                         "run still terminates with pages conserved")
+    ap.add_argument("--chaos-ticks", type=int, default=32,
+                    help="number of service ticks the seeded fault plan "
+                         "covers (with --chaos-seed)")
+    ap.add_argument("--no-guard", action="store_true",
+                    help="continuous mode: disable the post-round "
+                         "finiteness guard (and with it retry/degrade/"
+                         "preempt-on-fault)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write a Chrome/Perfetto trace of the run "
                          "(continuous mode: request lifecycles, engine "

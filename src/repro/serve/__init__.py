@@ -2,18 +2,24 @@
 
 ``blockpool`` owns paged cache memory (pages as hierarchical resources,
 admission as a conflict round), ``service`` runs the persistent
-prefill/decode loop through the core backends, and ``traffic`` generates
-open-loop synthetic request streams for the serving benchmark.
+prefill/decode loop through the core backends, ``traffic`` generates
+open-loop synthetic request streams for the serving benchmark, and
+``faults`` is the deterministic chaos-injection harness behind the
+service's robustness layer (deadlines, preemption with page
+reclamation, guarded decode with a degrade ladder — DESIGN.md
+§Robustness).
 """
 
 from .blockpool import AdmissionConflict, BlockPool, TT_PREFILL
-from .service import (DECODE_PATHS, ENG_DECODE, GenerateService, Request,
-                      SamplingParams, TT_DECODE)
+from .faults import FAULT_KINDS, FaultEvent, FaultPlan
+from .service import (DECODE_PATHS, ENG_DECODE, GenerateService, QueueFull,
+                      Request, SamplingParams, ServiceStalled, TT_DECODE)
 from .traffic import SyntheticRequest, open_loop_trace
 
 __all__ = [
     "AdmissionConflict", "BlockPool", "TT_PREFILL",
-    "DECODE_PATHS", "ENG_DECODE", "GenerateService", "Request",
-    "SamplingParams", "TT_DECODE",
+    "FAULT_KINDS", "FaultEvent", "FaultPlan",
+    "DECODE_PATHS", "ENG_DECODE", "GenerateService", "QueueFull",
+    "Request", "SamplingParams", "ServiceStalled", "TT_DECODE",
     "SyntheticRequest", "open_loop_trace",
 ]

@@ -49,11 +49,22 @@ def open_loop_trace(n_requests: int, *, mean_interarrival: float,
 
 
 def replay(service, trace: Sequence[SyntheticRequest],
-           max_steps: int = 100_000) -> List:
+           max_steps: int = 100_000, faults=None) -> List:
     """Feed a trace into a :class:`~repro.serve.service.GenerateService`
     open-loop: submit every request whose arrival step has passed, tick
     once, repeat until drained.  Returns the submitted Request handles in
-    arrival order."""
+    arrival order.
+
+    ``faults`` installs a :class:`~repro.serve.faults.FaultPlan` on the
+    service for the replay — the chaos harness's entry point for
+    trace-level tests and the CI chaos smoke.  A bounded-queue service
+    that rejects an arrival propagates :class:`QueueFull` to the caller
+    (open-loop traffic does not retry); a replay that fails to drain
+    raises the service's diagnostic :class:`ServiceStalled`."""
+    from .service import ServiceStalled
+
+    if faults is not None:
+        service.inject(faults)
     pending = sorted(trace, key=lambda r: r.arrival_step)
     handles, i = [], 0
     for step in range(max_steps):
@@ -64,4 +75,9 @@ def replay(service, trace: Sequence[SyntheticRequest],
         busy = service.step()
         if i == len(pending) and not busy:
             return handles
-    raise RuntimeError(f"trace did not drain in {max_steps} steps")
+    raise ServiceStalled(
+        f"trace did not drain in {max_steps} steps",
+        queue_depth=len(service._queue),
+        active_slots=len(service._active),
+        last_progress_tick=service._last_progress_tick,
+        steps=max_steps)

@@ -103,6 +103,75 @@ def test_forged_overlap_is_refused(sizes, a, b):
         pool.plan_admission(batch)
 
 
+# one lifecycle op against a miniature service model: submit a request,
+# tick the service (admit head-of-line + decode + retire), preempt an
+# active victim (pages back, requeued for re-admission — the robustness
+# tier's eviction path), or cancel a live request outright
+_LIFECYCLE = st.lists(
+    st.tuples(st.sampled_from(["submit", "step", "preempt", "cancel"]),
+              st.integers(min_value=0, max_value=7)),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_LIFECYCLE, n_pages=st.integers(min_value=6, max_value=20))
+def test_lifecycle_interleavings_conserve_pages(ops, n_pages):
+    """Arbitrary interleavings of admit/decode/preempt/cancel — the
+    service's page-accounting protocol (head-of-line admission as a
+    single conflict round, per-tick retire, preemption with requeue,
+    cancellation from queue or slot) — conserve pages after *every* op
+    and never hand a page to two live owners.  This is the invariant
+    that makes preemption safe: a victim's pages go back intact and its
+    re-admission is just another conflict round."""
+    pool = BlockPool(n_pages, page_size=4)
+    queue = []                      # (rid, pages needed, ticks left)
+    active = {}                     # rid -> [pages, ticks left]
+    rid, max_batch = 0, 3
+    for kind, arg in ops:
+        if kind == "submit":
+            queue.append((rid, 1 + arg % 3, 1 + arg % 4))
+            rid += 1
+        elif kind == "step":
+            batch = []
+            while queue and len(active) + len(batch) < max_batch:
+                r, need, budget = queue[0]
+                if not pool.can_admit(need):
+                    break           # head-of-line blocking, like _admit
+                queue.pop(0)
+                batch.append((r, pool.alloc(need, owner=r), budget))
+            if batch:
+                _, plan = pool.plan_admission([pg for _, pg, _ in batch])
+                assert plan.nr_rounds == 1
+                for r, pg, budget in batch:
+                    active[r] = [pg, budget]
+            for r in list(active):  # one decode tick; retire exhausted
+                active[r][1] -= 1
+                if active[r][1] <= 0:
+                    pool.free(active.pop(r)[0])
+        elif kind == "preempt" and active:
+            r = sorted(active)[arg % len(active)]
+            pg, budget = active.pop(r)
+            pool.free(pg)
+            queue.insert(0, (r, len(pg), budget))   # re-admit later
+        elif kind == "cancel":
+            live = sorted(active) + [q[0] for q in queue]
+            if live:
+                r = live[arg % len(live)]
+                if r in active:
+                    pool.free(active.pop(r)[0])
+                else:
+                    queue = [q for q in queue if q[0] != r]
+        pool.check_invariants()
+        claimed = [p for pg, _ in active.values() for p in pg]
+        assert len(claimed) == len(set(claimed)), \
+            "a page is assigned to two live requests"
+        assert pool.allocated == len(claimed)
+    for pg, _ in active.values():
+        pool.free(pg)
+    pool.check_invariants()
+    assert pool.allocated == 0      # full drain returns every page
+
+
 def test_exhaustion_and_double_free():
     pool = BlockPool(4, page_size=4)
     pages = pool.alloc(4, owner="r0")

@@ -1,0 +1,335 @@
+"""Robustness-layer conformance tests (DESIGN.md §Robustness).
+
+Every failure path of the serving tier is driven deterministically by
+the chaos harness (`repro.serve.faults`) and pinned against the
+fault-free run of the same workload:
+
+* transient NaN faults recover via the in-tick retry, bitwise;
+* sticky NaN faults force preemption + re-admission and *still* recover
+  bitwise (greedy prefill of prompt + generated reproduces the evicted
+  continuation exactly);
+* admission failures roll back with page conservation and retry;
+* deadline expiry and cancellation reach terminal states with the
+  prefix property (what was generated matches the fault-free stream);
+* requests untouched by any fault are bitwise-identical to the
+  fault-free run (the chaos-blast-radius contract);
+* the degrade ladder walks down on faulted ticks and promotes back
+  after the exponential-backoff cooldown.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm, serving
+from repro.serve import (FaultEvent, FaultPlan, GenerateService, QueueFull,
+                         ServiceStalled, open_loop_trace)
+from repro.serve.traffic import replay
+
+MAX_SEQ = 24
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _reference_tokens(params, cfg, prompt, n_new):
+    """Sequential single-request greedy reference (as in test_serve)."""
+    logits, cache, pos = serving.prefill(params, cfg, prompt[None])
+    cache = {k: jnp.pad(v, [(0, 0), (0, 0), (0, MAX_SEQ - v.shape[2])]
+                        + [(0, 0)] * (v.ndim - 3))
+             for k, v in cache.items()}
+    toks = [int(np.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        logits, cache = serving.decode_step(
+            params, cfg, cache, jnp.asarray([[toks[-1]]], jnp.int32), pos)
+        toks.append(int(np.argmax(logits[0])))
+        pos = pos + 1
+    return toks
+
+
+def _prompts(cfg, plens, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=pl, dtype=np.int32)
+            for pl in plens]
+
+
+def _drained(svc):
+    """Terminal-state + conservation postconditions every scenario ends
+    with."""
+    assert not svc._active and not svc._queue
+    assert svc.pool.allocated == 0
+    svc.pool.check_invariants()
+
+
+def test_transient_nan_retries_and_recovers(dense):
+    """sticky=1: the guard trips, the gather retry recomputes the tick
+    cleanly, the stream is bitwise-unharmed and nothing is preempted."""
+    params, cfg = dense
+    (prompt,) = _prompts(cfg, [5])
+    svc = GenerateService(params, cfg, max_batch=2, max_seq=MAX_SEQ,
+                          page_size=4,
+                          faults=FaultPlan([FaultEvent(2, "nan_decode",
+                                                       sticky=1)]))
+    h = svc.submit(prompt, 6)
+    svc.run_until_complete()
+    assert h.status == "done" and h.generated == _reference_tokens(
+        params, cfg, prompt, 6)
+    assert svc.stats["retries"] == 1
+    assert svc.stats["preemptions"] == 0
+    assert svc.stats["faults_injected"] == 1
+    assert h.rid in svc.retried_rids and h.rid not in svc.faulted_rids
+    _drained(svc)
+
+
+def test_sticky_nan_preempts_and_readmits_bitwise(dense):
+    """sticky=3 poisons the retry too: the victim is preempted, its
+    pages reclaimed, and re-admission (prefill of prompt + generated)
+    continues the greedy stream bitwise."""
+    params, cfg = dense
+    (prompt,) = _prompts(cfg, [5])
+    svc = GenerateService(params, cfg, max_batch=2, max_seq=MAX_SEQ,
+                          page_size=4,
+                          faults=FaultPlan([FaultEvent(2, "nan_decode",
+                                                       sticky=3)]))
+    h = svc.submit(prompt, 6)
+    svc.run_until_complete()
+    assert h.status == "done" and h.preemptions == 1
+    assert h.generated == _reference_tokens(params, cfg, prompt, 6)
+    assert svc.stats["preemptions"] == 1
+    assert svc.stats["retries"] >= 1
+    assert h.rid in svc.faulted_rids
+    _drained(svc)
+
+
+def test_admission_failure_rolls_back_and_retries(dense):
+    """An injected AdmissionConflict after pages/slots were assigned must
+    roll back completely (conservation asserted inside the service) and
+    the batch must admit cleanly on the next tick."""
+    params, cfg = dense
+    prompts = _prompts(cfg, [5, 5])
+    svc = GenerateService(params, cfg, max_batch=2, max_seq=MAX_SEQ,
+                          page_size=4,
+                          faults=FaultPlan([FaultEvent(0, "admission_fail")]))
+    hs = [svc.submit(p, 3) for p in prompts]
+    svc.run_until_complete()
+    for h, p in zip(hs, prompts):
+        assert h.status == "done"
+        assert h.generated == _reference_tokens(params, cfg, p, 3)
+    assert svc.stats["retries"] == 2          # both rolled-back requests
+    assert svc.stats["admitted"] == 2
+    _drained(svc)
+
+
+def test_drop_prefill_respecializes_midstream(dense):
+    """Dropping the prefill entry-point cache mid-stream forces cold
+    re-specialization on the next admission; streams are unaffected."""
+    params, cfg = dense
+    prompts = _prompts(cfg, [5, 5])
+    svc = GenerateService(params, cfg, max_batch=1, max_seq=MAX_SEQ,
+                          page_size=4,
+                          faults=FaultPlan([FaultEvent(1, "drop_prefill")]))
+    hs = [svc.submit(p, 3) for p in prompts]   # max_batch=1: B admits later
+    svc.run_until_complete()
+    for h, p in zip(hs, prompts):
+        assert h.status == "done"
+        assert h.generated == _reference_tokens(params, cfg, p, 3)
+    assert (5, 1) in svc._prefill_fns          # rebuilt after the drop
+    _drained(svc)
+
+
+def test_stall_expires_deadlines_prefix_property(dense):
+    """A stall jumping the virtual clock expires the deadlined request
+    (active victim preempted terminally; what it generated is a prefix of
+    the fault-free stream) while the undeadlined request is untouched."""
+    params, cfg = dense
+    prompts = _prompts(cfg, [5, 7])
+    svc = GenerateService(params, cfg, max_batch=2, max_seq=MAX_SEQ,
+                          page_size=4,
+                          faults=FaultPlan([FaultEvent(2, "stall",
+                                                       skew_s=7200.0)]))
+    victim = svc.submit(prompts[0], 8, deadline_ms=3600_000.0)
+    other = svc.submit(prompts[1], 8)
+    svc.run_until_complete()
+    assert victim.status == "deadline_exceeded" and victim.done
+    ref = _reference_tokens(params, cfg, prompts[0], 8)
+    assert victim.generated == ref[:len(victim.generated)]
+    assert len(victim.generated) < 8
+    assert other.status == "done"
+    assert other.generated == _reference_tokens(params, cfg, prompts[1], 8)
+    assert svc.stats["deadline_exceeded"] == 1
+    assert victim.rid in svc.faulted_rids and other.rid not in svc.faulted_rids
+    _drained(svc)
+
+
+def test_queued_deadline_expires_without_tokens(dense):
+    """A request whose deadline passes while still queued retires
+    terminally with zero tokens and never takes pages."""
+    params, cfg = dense
+    prompts = _prompts(cfg, [5, 5])
+    svc = GenerateService(params, cfg, max_batch=1, max_seq=MAX_SEQ,
+                          page_size=4,
+                          faults=FaultPlan([FaultEvent(1, "stall",
+                                                       skew_s=7200.0)]))
+    first = svc.submit(prompts[0], 6)
+    queued = svc.submit(prompts[1], 6, deadline_ms=3600_000.0)
+    svc.run_until_complete()
+    assert first.status == "done" and len(first.generated) == 6
+    assert queued.status == "deadline_exceeded" and queued.generated == []
+    assert queued.t_done > 0 and queued.latency_s > 0
+    _drained(svc)
+
+
+def test_cancel_active_and_queued(dense):
+    """cancel() preempts an active victim (pages reclaimed) and removes a
+    queued one; the surviving request's stream is bitwise-unaffected.
+    Unknown / already-terminal rids return False."""
+    params, cfg = dense
+    prompts = _prompts(cfg, [5, 5, 5])
+    svc = GenerateService(params, cfg, max_batch=2, max_seq=MAX_SEQ,
+                          page_size=4)
+    keeper = svc.submit(prompts[0], 6)
+    active_victim = svc.submit(prompts[1], 6)
+    svc.step()
+    queued_victim = svc.submit(prompts[2], 6)   # both slots taken: queued
+    assert svc.cancel(active_victim.rid)
+    assert svc.cancel(queued_victim.rid)
+    assert not svc.cancel(999) and not svc.cancel(active_victim.rid)
+    svc.run_until_complete()
+    assert active_victim.status == "cancelled" and active_victim.done
+    assert queued_victim.status == "cancelled"
+    assert queued_victim.generated == []
+    assert keeper.status == "done"
+    assert keeper.generated == _reference_tokens(params, cfg, prompts[0], 6)
+    assert svc.stats["cancelled"] == 2
+    assert svc.stats["preemptions"] == 1        # only the active victim
+    _drained(svc)
+
+
+def test_queue_full_rejects_with_diagnostics(dense):
+    params, cfg = dense
+    prompts = _prompts(cfg, [5, 5, 5])
+    svc = GenerateService(params, cfg, max_batch=1, max_seq=MAX_SEQ,
+                          page_size=4, max_queue=2)
+    svc.submit(prompts[0], 2)
+    svc.submit(prompts[1], 2)
+    with pytest.raises(QueueFull) as ei:
+        svc.submit(prompts[2], 2)
+    assert ei.value.queue_depth == 2 and ei.value.max_queue == 2
+    assert svc.stats["rejected"] == 1
+    assert svc.stats["submitted"] == 2          # the reject never counted
+    svc.run_until_complete()
+    _drained(svc)
+
+
+def test_service_stalled_carries_diagnostics(dense):
+    params, cfg = dense
+    (prompt,) = _prompts(cfg, [5])
+    svc = GenerateService(params, cfg, max_batch=2, max_seq=MAX_SEQ,
+                          page_size=4)
+    svc.submit(prompt, 10)
+    with pytest.raises(ServiceStalled) as ei:
+        svc.run_until_complete(max_steps=2)
+    err = ei.value
+    assert err.active_slots == 1 and err.queue_depth == 0
+    assert err.steps == 2 and err.last_progress_tick == 1
+    svc.run_until_complete()                    # budget was the only issue
+    _drained(svc)
+
+
+def test_degrade_ladder_walks_down_and_promotes_back(dense):
+    """A faulted tick degrades one rung (bounded → gather on CPU) and
+    sets an exponential-backoff cooldown of clean ticks; surviving the
+    cooldown promotes back up."""
+    params, cfg = dense
+    (prompt,) = _prompts(cfg, [5])
+    svc = GenerateService(params, cfg, max_batch=2, max_seq=MAX_SEQ,
+                          page_size=4, decode_path="bounded",
+                          faults=FaultPlan([FaultEvent(1, "nan_decode",
+                                                       sticky=1)]))
+    assert svc._ladder == ("bounded", "gather")
+    h = svc.submit(prompt, 8)
+    paths = []
+    while svc.step():
+        paths.append(svc.decode_path_active)
+    # paths[i] is the active rung *after* tick i.  Tick 0 is clean; tick
+    # 1 faults -> degrade to gather with cooldown 2**1 = 2; ticks 2-3
+    # burn the cooldown; tick 4 promotes back to bounded
+    assert paths[0] == "bounded"
+    assert paths[1:4] == ["gather"] * 3
+    assert paths[4] == "bounded"
+    assert h.status == "done"
+    assert h.generated == _reference_tokens(params, cfg, prompt, 8)
+    _drained(svc)
+
+
+def test_guard_off_runs_and_refuses_injection(dense):
+    params, cfg = dense
+    (prompt,) = _prompts(cfg, [5])
+    svc = GenerateService(params, cfg, max_batch=2, max_seq=MAX_SEQ,
+                          page_size=4, guard=False)
+    with pytest.raises(ValueError, match="guard"):
+        svc.inject(FaultPlan([FaultEvent(0, "admission_fail")]))
+    h = svc.submit(prompt, 4)
+    svc.run_until_complete()
+    assert h.generated == _reference_tokens(params, cfg, prompt, 4)
+    _drained(svc)
+
+
+def test_chaos_trace_unaffected_requests_bitwise(dense):
+    """The blast-radius contract on a mixed chaos trace: every request
+    reaches a terminal state, pages are conserved, and any request the
+    faults never touched (not preempted / cancelled / expired) has a
+    token stream bitwise-identical to the fault-free replay.  Requests
+    that recovered via retry or preemption must *also* match (greedy
+    recovery is exact)."""
+    params, cfg = dense
+    trace = open_loop_trace(6, mean_interarrival=1.5, prompt_lens=(5, 7),
+                            new_token_lens=(3, 5, 7), vocab_size=cfg.vocab,
+                            seed=7)
+
+    def run(faults):
+        svc = GenerateService(params, cfg, max_batch=2, max_seq=MAX_SEQ,
+                              page_size=4)
+        handles = replay(svc, trace, faults=faults)
+        return svc, handles
+
+    _, clean = run(None)
+    plan = FaultPlan([FaultEvent(2, "nan_decode", sticky=1),
+                      FaultEvent(4, "nan_decode", victim=1, sticky=3),
+                      FaultEvent(5, "admission_fail"),
+                      FaultEvent(6, "drop_prefill")])
+    svc, chaotic = run(plan)
+    assert svc.stats["retries"] >= 1 and svc.stats["preemptions"] >= 1
+    for h_clean, h_chaos in zip(clean, chaotic):
+        assert h_chaos.done and h_chaos.status == "done"
+        assert h_chaos.generated == h_clean.generated, \
+            f"rid={h_chaos.rid} diverged under chaos " \
+            f"(faulted={h_chaos.rid in svc.faulted_rids})"
+    _drained(svc)
+
+
+def test_seeded_plan_terminates_everything(dense):
+    """CI-chaos-smoke shape in miniature: a seeded Poisson fault plan
+    over an open-loop trace — all requests terminal, pool conserved,
+    failure counters consistent with what actually fired."""
+    params, cfg = dense
+    trace = open_loop_trace(5, mean_interarrival=1.0, prompt_lens=(5, 7),
+                            new_token_lens=(3, 5), vocab_size=cfg.vocab,
+                            seed=3)
+    plan = FaultPlan.seeded(11, 24, p_nan=0.25, p_admission=0.15,
+                            p_drop=0.1)
+    assert plan.summary()["nan_decode"] >= 1
+    svc = GenerateService(params, cfg, max_batch=2, max_seq=MAX_SEQ,
+                          page_size=4)
+    handles = replay(svc, trace, faults=plan)
+    assert all(h.done for h in handles)
+    assert svc.stats["retired"] == len(handles)
+    fired = sum(1 for _, _, applied in svc.faults_fired if applied)
+    assert svc.stats["faults_injected"] == fired
+    _drained(svc)
